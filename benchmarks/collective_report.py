@@ -1,0 +1,32 @@
+"""Inspection tool: top collective contributors per dry-run cell.
+
+    PYTHONPATH=src python -m benchmarks.collective_report [pattern]
+
+Prints the largest collective ops (shape x trip-count = bytes) recorded in
+experiments/dryrun/*.json — the profile §Perf iterations are driven by.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import List
+
+
+def run(pattern: str = "") -> List[str]:
+    rows = ["collectives.cell,gib,op"]
+    for fn in sorted(glob.glob("experiments/dryrun/*.json")):
+        if pattern and pattern not in fn:
+            continue
+        rec = json.load(open(fn))
+        if rec.get("status") != "ok" or not rec.get("collective_top"):
+            continue
+        cell = os.path.basename(fn)[:-5]
+        for k, v in rec["collective_top"][:3]:
+            rows.append(f"{cell},{v / 2**30:.1f},{k[:90]}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run(sys.argv[1] if len(sys.argv) > 1 else "")))

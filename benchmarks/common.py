@@ -1,0 +1,74 @@
+"""Shared benchmark helpers: timing + the paper's instance methodology.
+
+Methodology mirrors the paper: all matchers start from the same cheap
+matching (not timed); the JAX matchers are compiled once per shape bucket
+(warmup run, not timed); sequential baselines are Hopcroft-Karp and
+Pothen-Fan in numpy/python plus scipy's C Hopcroft-Karp (``HK-C``) as the
+strong sequential baseline.  Instances: the synthetic suite standing in for
+the UFL classes (see repro.graphs.generators), original + RCP (permuted).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import (MatcherConfig, cheap_matching_jax, hopcroft_karp,
+                        maximum_matching, pfp, push_relabel,
+                        validate_matching)
+from repro.core.csr import BipartiteCSR
+
+
+def time_call(fn: Callable, repeat: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def time_matcher(g: BipartiteCSR, cfg: MatcherConfig, cm0, rm0,
+                 repeat: int = 3) -> Tuple[float, dict]:
+    # warmup (compile)
+    cm, rm, stats = maximum_matching(g, cfg, cm0, rm0)
+    t = time_call(lambda: maximum_matching(g, cfg, cm0, rm0), repeat)
+    return t, stats
+
+
+def time_sequential(g: BipartiteCSR, cm0, rm0) -> Dict[str, float]:
+    import scipy.sparse as sp
+    from scipy.sparse.csgraph import maximum_bipartite_matching
+
+    out = {}
+    t0 = time.perf_counter()
+    hopcroft_karp(g, cm0, rm0)
+    out["HK"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pfp(g, cm0, rm0)
+    out["PFP"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    push_relabel(g, cm0, rm0)
+    out["PR"] = time.perf_counter() - t0
+    m = sp.csr_matrix((np.ones(g.nnz, np.int8), g.cadj[: g.nnz], g.cxadj),
+                      shape=(g.nc, g.nr))
+    t0 = time.perf_counter()
+    maximum_bipartite_matching(m, perm_type="column")
+    out["HK-C"] = time.perf_counter() - t0
+    return out
+
+
+def geomean(xs: List[float]) -> float:
+    xs = [max(x, 1e-9) for x in xs]
+    return float(np.exp(np.mean(np.log(xs))))
+
+
+def prepared_instances(scale: str, rcp: bool, seed: int = 13):
+    from repro.graphs import instance_sets
+    out = {}
+    for name, g in instance_sets(scale).items():
+        gg = g.permuted(seed) if rcp else g
+        cm0, rm0 = cheap_matching_jax(gg)
+        out[name] = (gg, cm0, rm0)
+    return out

@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure + framework benches.
+
+``PYTHONPATH=src python -m benchmarks.run [--scale tiny|small|large]
+[--only table1,...]``  prints ``name,...`` CSV rows per bench.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (fig2_bfs_iters, fig35_speedups, perf_matcher, roofline,
+               table1_variants, table2_hardest, table_init, table_router)
+
+BENCHES = {
+    "table1": table1_variants.run,     # paper Table 1
+    "table2": table2_hardest.run,      # paper Table 2
+    "fig2": fig2_bfs_iters.run,        # paper Figure 2
+    "fig35": fig35_speedups.run,       # paper Figures 3-5
+    "router": table_router.run,        # framework integration (DESIGN §4)
+    "init": table_init.run,            # KS vs cheap init (beyond-paper)
+    "perf_matcher": perf_matcher.run,  # EXPERIMENTS §Perf (matcher hillclimb)
+    "roofline": roofline.run,          # EXPERIMENTS §Roofline (from dry-run)
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="tiny",
+                    choices=["tiny", "small", "large"])
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(BENCHES)
+    failures = 0
+    for name, fn in BENCHES.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn(args.scale)
+            print("\n".join(rows), flush=True)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # keep the harness going; report at exit
+            import traceback
+            traceback.print_exc()
+            print(f"# {name} FAILED: {e}", flush=True)
+            failures += 1
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

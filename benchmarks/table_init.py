@@ -1,0 +1,33 @@
+"""Initialization-quality study: cheap matching vs Karp-Sipser (beyond-paper).
+
+The paper initializes everything with cheap matching; KS peeling leaves
+fewer unmatched vertices, which cuts the matcher's phase count.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import (MatcherConfig, cheap_matching_jax, karp_sipser_jax,
+                        maximum_cardinality, maximum_matching)
+from repro.graphs import instance_sets
+
+BEST = MatcherConfig(algo="apfb", kernel="gpubfs_wr", schedule="ct")
+
+
+def run(scale: str = "tiny") -> List[str]:
+    rows = ["init.instance,opt,cheap_card,ks_card,"
+            "phases_from_cheap,phases_from_ks"]
+    for name, g in instance_sets(scale).items():
+        opt = maximum_cardinality(g)
+        c_cm, c_rm = cheap_matching_jax(g)
+        k_cm, k_rm = karp_sipser_jax(g)
+        _, _, st_c = maximum_matching(g, BEST, c_cm, c_rm)
+        _, _, st_k = maximum_matching(g, BEST, k_cm, k_rm)
+        rows.append(f"{name},{opt},{(c_cm >= 0).sum()},{(k_cm >= 0).sum()},"
+                    f"{st_c['phases']},{st_k['phases']}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

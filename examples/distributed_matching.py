@@ -1,0 +1,40 @@
+"""The paper's stated future work: distributed-memory matching.
+
+Edge-partitioned APFB over a device mesh (shard_map + pmin per BFS level).
+Runs on 8 simulated host devices:
+
+    PYTHONPATH=src python examples/distributed_matching.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+from repro.core import (MatcherConfig, cheap_matching_jax,                  # noqa: E402
+                        maximum_cardinality, validate_matching)
+from repro.core.distributed import maximum_matching_distributed            # noqa: E402
+from repro.graphs import random_bipartite                                  # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((8,), ("data",))
+    g = random_bipartite(4096, 4096, 6.0, seed=0)
+    print(f"graph: {g.nc}x{g.nr}, {g.nnz} edges, "
+          f"sharded over {mesh.shape['data']} devices "
+          f"({g.nnz_pad // 8} edges/device)")
+    cm0, rm0 = cheap_matching_jax(g)
+    cfg = MatcherConfig(algo="apfb", kernel="gpubfs_wr")
+    cmatch, rmatch, stats = maximum_matching_distributed(
+        g, mesh, cfg, cmatch0=cm0, rmatch0=rm0)
+    card = validate_matching(g, cmatch, rmatch)
+    opt = maximum_cardinality(g)
+    print(f"distributed {stats['variant']}: |M| = {card} "
+          f"(optimal {opt}) in {stats['phases']} phases")
+    assert card == opt
+    print("OK — one pmin collective per BFS level, state replicated, "
+          "edges sharded")
+
+
+if __name__ == "__main__":
+    main()

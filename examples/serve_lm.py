@@ -1,0 +1,24 @@
+"""Batched serving: prefill a batch of prompts, decode with the KV/SSM cache.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-2.7b]
+"""
+import argparse
+
+from repro.configs import ARCH_NAMES
+from repro.launch.serve import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-2.7b", choices=ARCH_NAMES)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    out = run(args.arch, smoke=True, batch=args.batch,
+              prompt_len=args.prompt_len, gen=args.gen)
+    print("generated token ids (first sequence):", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

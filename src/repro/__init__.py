@@ -1,0 +1,2 @@
+"""repro: the paper's bipartite-matching system + LM substrate, in JAX."""
+__version__ = "0.1.0"

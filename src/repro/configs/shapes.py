@@ -1,0 +1,92 @@
+"""The assigned input-shape set and per-(arch, shape) applicability rules.
+
+  train_4k     seq=4096    global_batch=256   -> train_step
+  prefill_32k  seq=32768   global_batch=32    -> prefill (forward)
+  decode_32k   seq=32768   global_batch=128   -> serve_step (1 tok, KV 32k)
+  long_500k    seq=524288  global_batch=1     -> serve_step, sub-quadratic only
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq: int
+    batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def sub_quadratic(cfg: ModelConfig) -> bool:
+    return cfg.family in ("ssm", "hybrid") or cfg.attn in ("swa", "chunked")
+
+
+def applicable(cfg: ModelConfig, shape: ShapeCell) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped). The skip list is documented in DESIGN.md."""
+    if shape.name == "long_500k" and not sub_quadratic(cfg):
+        return False, "full attention is quadratic at 500k (DESIGN.md skip)"
+    return True, ""
+
+
+def scaled_shape(shape: ShapeCell, seq: int, batch: int) -> ShapeCell:
+    """Reduced copy of a cell for smoke tests."""
+    return ShapeCell(shape.name, seq, batch, shape.kind)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell,
+                dtype=jnp.int32) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    For train/prefill this is the token batch (+ stub frontend embeddings);
+    decode cells take the one-token batch — the KV cache comes from
+    ``Model.init_cache`` via ``jax.eval_shape`` in the dry-run.
+    """
+    B, S = shape.batch, shape.seq
+    emb = jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, jax.ShapeDtypeStruct] = {}
+        s_text = S
+        if cfg.frontend == "vision":
+            s_text = S - cfg.frontend_len
+            batch["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.d_model), emb)
+        batch["tokens"] = jax.ShapeDtypeStruct((B, s_text), dtype)
+        if cfg.enc_layers:
+            batch["enc_frames"] = jax.ShapeDtypeStruct(
+                (B, max(cfg.frontend_len, S // 4), cfg.d_model), emb)
+        if shape.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((B, s_text), dtype)
+        return batch
+    # decode: one new token against a seq-long cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), dtype)}
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeCell, seed: int = 0):
+    """Concrete random inputs matching input_specs (smoke tests / examples)."""
+    specs = input_specs(cfg, shape)
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, s in specs.items():
+        key, k = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab,
+                                           dtype=s.dtype)
+        else:
+            out[name] = jax.random.normal(k, s.shape, jnp.float32).astype(
+                s.dtype)
+    return out

@@ -1,0 +1,14 @@
+"""Core: the paper's maximum-cardinality bipartite matching algorithms."""
+from .csr import BipartiteCSR, validate_matching, UNMATCHED, ENDPOINT
+from .matcher import MatcherConfig, VARIANTS, maximum_matching
+from .cheap import cheap_matching_jax
+from .karp_sipser import karp_sipser_jax
+from .oracles import (cheap_matching, hopcroft_karp, pfp,
+                      maximum_cardinality, push_relabel)
+
+__all__ = [
+    "BipartiteCSR", "validate_matching", "UNMATCHED", "ENDPOINT",
+    "MatcherConfig", "VARIANTS", "maximum_matching", "cheap_matching_jax",
+    "cheap_matching", "hopcroft_karp", "pfp", "maximum_cardinality",
+    "push_relabel", "karp_sipser_jax",
+]

@@ -1,0 +1,12 @@
+"""Bipartite graph instance generation — the paper's experimental sets."""
+from .generators import (
+    banded,
+    grid_graph,
+    instance_sets,
+    kron_graph,
+    random_bipartite,
+    scaled_free,
+)
+
+__all__ = ["random_bipartite", "kron_graph", "grid_graph", "scaled_free",
+           "banded", "instance_sets"]

@@ -1,0 +1,138 @@
+"""Synthetic bipartite instance families standing in for the UFL collection.
+
+The paper evaluates on 70 UFL sparse matrices spanning road networks
+(italy_osm, europe_osm), Delaunay meshes, social/web graphs (soc-LiveJournal,
+wikipedia), Kronecker graphs (kron_g500) and linear-programming matrices, plus
+randomly row/column-permuted copies (RCP sets) that destroy locality and make
+the problems harder for augmenting-path algorithms.
+
+Offline we reproduce the same *structure classes*:
+
+* ``random_bipartite`` — Erdos-Renyi-like sparse matrices (LP-style),
+* ``kron_graph``       — RMAT/Kronecker power-law (kron_g500-style),
+* ``grid_graph``       — 2-D mesh adjacency (road/Delaunay-style: long paths),
+* ``scaled_free``      — heavy-tail degree columns (web/social-style),
+
+and ``BipartiteCSR.permuted()`` provides the RCP transform.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.csr import BipartiteCSR
+
+
+def random_bipartite(nc: int, nr: int, avg_deg: float, seed: int = 0,
+                     pad_to=None) -> BipartiteCSR:
+    """Uniform random bipartite graph with ~avg_deg edges per column."""
+    rng = np.random.default_rng(seed)
+    nnz = int(nc * avg_deg)
+    cols = rng.integers(0, nc, size=nnz)
+    rows = rng.integers(0, nr, size=nnz)
+    return BipartiteCSR.from_edges(cols, rows, nc, nr, pad_to=pad_to)
+
+
+def kron_graph(scale: int, edge_factor: int = 8, seed: int = 0,
+               pad_to=None) -> BipartiteCSR:
+    """RMAT/Kronecker bipartite graph (Graph500 parameters a,b,c=.57,.19,.19)."""
+    n = 1 << scale
+    nnz = n * edge_factor
+    rng = np.random.default_rng(seed)
+    a, b, c = 0.57, 0.19, 0.19
+    cols = np.zeros(nnz, dtype=np.int64)
+    rows = np.zeros(nnz, dtype=np.int64)
+    for bit in range(scale):
+        u = rng.random(nnz)
+        # quadrant probabilities: (0,0)=a, (0,1)=b, (1,0)=c, (1,1)=d
+        cbit = (u >= a + b).astype(np.int64)
+        rbit = ((u >= a) & (u < a + b) | (u >= a + b + c)).astype(np.int64)
+        cols |= cbit << bit
+        rows |= rbit << bit
+    return BipartiteCSR.from_edges(cols, rows, n, n, pad_to=pad_to)
+
+
+def grid_graph(side: int, pad_to=None) -> BipartiteCSR:
+    """Bipartite double cover of a 2-D grid — long augmenting paths, like the
+    paper's road/Delaunay instances (the hard cases for BFS matchers)."""
+    n = side * side
+    idx = np.arange(n).reshape(side, side)
+    cols_l: List[np.ndarray] = [np.arange(n)]
+    rows_l: List[np.ndarray] = [np.arange(n)]          # self edge (diagonal)
+    right_c = idx[:, :-1].ravel()
+    right_r = idx[:, 1:].ravel()
+    down_c = idx[:-1, :].ravel()
+    down_r = idx[1:, :].ravel()
+    cols_l += [right_c, right_r, down_c, down_r]
+    rows_l += [right_r, right_c, down_r, down_c]
+    cols = np.concatenate(cols_l)
+    rows = np.concatenate(rows_l)
+    return BipartiteCSR.from_edges(cols, rows, n, n, pad_to=pad_to)
+
+
+def scaled_free(nc: int, nr: int, avg_deg: float, alpha: float = 1.8,
+                seed: int = 0, pad_to=None) -> BipartiteCSR:
+    """Power-law column degrees (web/social-matrix style)."""
+    rng = np.random.default_rng(seed)
+    w = rng.zipf(alpha, size=nc).astype(np.float64)
+    w = np.minimum(w, nr // 2)
+    w *= (nc * avg_deg) / w.sum()
+    degs = np.maximum(1, rng.poisson(w)).astype(np.int64)
+    cols = np.repeat(np.arange(nc, dtype=np.int64), degs)
+    rows = rng.integers(0, nr, size=int(degs.sum()))
+    return BipartiteCSR.from_edges(cols, rows, nc, nr, pad_to=pad_to)
+
+
+def instance_sets(scale: str = "small") -> Dict[str, BipartiteCSR]:
+    """Named instance suite (original set; use .permuted() for the RCP set).
+
+    ``scale``: "tiny" (tests), "small" (CI benchmarks), "large" (full bench).
+    """
+    if scale == "tiny":
+        return {
+            "rand_1k": random_bipartite(1024, 1024, 4.0, seed=1),
+            "band_1k": banded(1024, band=4, density=0.5, seed=6),
+            "rand_rect": random_bipartite(768, 1280, 5.0, seed=2),
+            "kron_10": kron_graph(10, 8, seed=3),
+            "grid_24": grid_graph(24),
+            "free_1k": scaled_free(1024, 1024, 6.0, seed=4),
+        }
+    if scale == "small":
+        return {
+            "rand_16k": random_bipartite(16384, 16384, 5.0, seed=1),
+            "band_16k": banded(16384, band=6, density=0.5, seed=6),
+            "rand_rect16k": random_bipartite(12288, 20480, 6.0, seed=2),
+            "kron_14": kron_graph(14, 8, seed=3),
+            "grid_96": grid_graph(96),
+            "free_16k": scaled_free(16384, 16384, 8.0, seed=4),
+            "sparse_16k": random_bipartite(16384, 16384, 2.5, seed=5),
+        }
+    if scale == "large":
+        return {
+            "rand_262k": random_bipartite(1 << 18, 1 << 18, 5.0, seed=1),
+            "kron_17": kron_graph(17, 8, seed=3),
+            "grid_384": grid_graph(384),
+            "free_262k": scaled_free(1 << 18, 1 << 18, 8.0, seed=4),
+            "sparse_262k": random_bipartite(1 << 18, 1 << 18, 2.5, seed=5),
+        }
+    raise ValueError(scale)
+
+
+def banded(n: int, band: int = 5, density: float = 0.6, seed: int = 0,
+           pad_to=None) -> BipartiteCSR:
+    """Banded matrix (LP/PDE-style UFL class): edges within |c-r| <= band."""
+    rng = np.random.default_rng(seed)
+    offs = np.arange(-band, band + 1)
+    cols_l, rows_l = [np.arange(n)], [np.arange(n)]   # keep the diagonal
+    for off in offs:
+        if off == 0:
+            continue
+        c = np.arange(max(0, -off), min(n, n - off))
+        r = c + off
+        keep = rng.random(c.shape[0]) < density
+        cols_l.append(c[keep])
+        rows_l.append(r[keep])
+    return BipartiteCSR.from_edges(np.concatenate(cols_l),
+                                   np.concatenate(rows_l), n, n,
+                                   pad_to=pad_to)

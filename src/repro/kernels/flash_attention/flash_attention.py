@@ -1,0 +1,106 @@
+"""Pallas TPU flash attention (forward): online-softmax tiling in VMEM.
+
+Grid: (B, KV-heads, Q-blocks); the kernel loops KV blocks with
+``jax.lax.fori_loop``, keeping the (block_q x hd) accumulator, running max
+and running sum in VMEM — the FlashAttention recurrence adapted to MXU tile
+shapes:
+
+* block_q x block_k = 512 x 512 (both multiples of 128 — MXU-aligned),
+* per-tile VMEM: q (512*hd) + k,v (512*hd)*2 + acc (512*hd) + scores
+  (512*512*4 B) ~ 1.8 MiB at hd=128 — well under 16 MiB,
+* causal blocks above the diagonal are skipped via the loop upper bound
+  (the classic 2x saving), masking applies only on the diagonal blocks.
+
+GQA: queries are laid out (B, KV, G*S_q) so one kernel instance serves one
+KV head; grouped queries ride along the q-block axis.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_k, causal, seq_k):
+    # q_ref: (block_q, hd); k_ref/v_ref: (seq_k, hd); o_ref: (block_q, hd)
+    block_q, hd = q_ref.shape
+    qi = pl.program_id(2)
+    q = q_ref[...].astype(jnp.float32) * scale
+    nkv = seq_k // block_k
+    if causal:
+        # skip fully-masked blocks above the diagonal (the classic 2x)
+        last_kpos = (qi + 1) * block_q - 1
+        nkv = jnp.minimum(nkv, last_kpos // block_k + 1)
+
+    def body(j, carry):
+        acc, m_run, l_run = carry
+        k = jax.lax.dynamic_slice(k_ref[...], (j * block_k, 0),
+                                  (block_k, hd)).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(v_ref[...], (j * block_k, 0),
+                                  (block_k, hd)).astype(jnp.float32)
+        s = q @ k.T                                        # (bq, bk)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + p.sum(axis=1)
+        acc = acc * corr[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, hd), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nkv, body, (acc0, m0, l0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = True):
+    """q: (B,S,H,hd); k/v: (B,Sk,KV,hd). Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    assert H % KV == 0
+    block_q = min(block_q, S)
+    block_k = min(block_k, Sk)
+    assert S % block_q == 0 and Sk % block_k == 0
+    # Layout (B, KV*G, S, hd): one grid row per query head; the K/V BlockSpec
+    # index map folds GQA (h -> h // G) so K/V are NEVER replicated G times —
+    # the GQA bandwidth saving happens in the tiling itself.
+    qr = q.reshape(B, S, KV, G, hd).transpose(0, 2, 3, 1, 4)  # (B,KV,G,S,hd)
+    qr = qr.reshape(B, KV * G, S, hd)
+    kr = k.transpose(0, 2, 1, 3)                              # (B,KV,Sk,hd)
+    vr = v.transpose(0, 2, 1, 3)
+
+    grid = (B, KV * G, S // block_q)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=hd ** -0.5, block_k=block_k,
+                          causal=causal, seq_k=Sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, block_q, hd),
+                         lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((None, None, Sk, hd),
+                         lambda b, h, i: (b, h // G, 0, 0)),
+            pl.BlockSpec((None, None, Sk, hd),
+                         lambda b, h, i: (b, h // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q, hd),
+                               lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV * G, S, hd), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    out = out.reshape(B, KV, G, S, hd).transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, S, H, hd)

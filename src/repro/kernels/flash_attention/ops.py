@@ -1,0 +1,6 @@
+"""Jitted public wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+from .flash_attention import flash_attention
+
+__all__ = ["flash_attention"]

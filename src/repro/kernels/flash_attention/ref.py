@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal/bidir)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q: (B,S,H,hd); k/v: (B,S,KV,hd) with H % KV == 0."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    s *= hd ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((S, k.shape[1]), bool))
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v)
+    return out.reshape(B, S, H, hd)

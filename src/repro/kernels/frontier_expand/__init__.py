@@ -1,0 +1,4 @@
+from .ops import frontier_expand
+from .ref import frontier_expand_ref
+
+__all__ = ["frontier_expand", "frontier_expand_ref"]

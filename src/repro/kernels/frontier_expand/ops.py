@@ -1,0 +1,6 @@
+"""Jitted public wrapper for the frontier-expansion kernel."""
+from __future__ import annotations
+
+from .frontier_expand import frontier_expand
+
+__all__ = ["frontier_expand"]

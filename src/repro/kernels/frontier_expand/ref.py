@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the frontier-expansion kernel.
+
+Semantics (one BFS level of the paper's Alg. 2 / Alg. 4, proposal half):
+for every edge e = (c, r):
+  active  = bfs[c] == level            (and, WR: bfs[root[c]] >= L0-1)
+  propose = active and ( (rmatch[r] >= 0 and bfs[rmatch[r]] == L0-1)
+                         or rmatch[r] == -1 )
+  out[e]  = c if propose else IINF
+
+The scatter/merge half (min per row) is shared, deterministic jnp in the
+matcher; the kernel covers the gather-heavy proposal sweep, which is the
+memory-bound hot loop the paper tunes with its MT/CT thread geometry.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+UNVISITED = jnp.int32(1)
+IINF = jnp.int32(2**30)
+
+
+def frontier_expand_ref(ecol, cadj, bfs, root, rmatch, level):
+    nc = bfs.shape[0] - 1
+    active = bfs[ecol] == level
+    if root is not None:
+        active &= bfs[root[ecol]] >= UNVISITED
+    cm = rmatch[cadj]
+    col_unvis = bfs[jnp.clip(cm, 0, nc)] == UNVISITED
+    target = active & ((cm >= 0) & col_unvis | (cm == -1))
+    return jnp.where(target, ecol, IINF)

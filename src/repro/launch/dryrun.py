@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the right step function (train_step / prefill /
+serve_step) against ShapeDtypeStruct inputs on the production mesh, compiles
+it, and records:
+
+  * memory_analysis()  — proves the cell fits per-device HBM,
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * collective bytes   — parsed from the optimized HLO text per collective op,
+
+into experiments/dryrun/<arch>__<shape>__<mesh>.json, which
+benchmarks/roofline.py turns into EXPERIMENTS.md §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch h2o-danube-1.8b \
+      --shape train_4k [--multi-pod] [--all] [--out experiments/dryrun]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.shapes import SHAPES, applicable, input_specs
+from repro.launch.hlo_cost import analyze as hlo_analyze
+from repro.launch.mesh import data_axis_size, logical_rules, make_production_mesh
+from repro.models import build_model, resolve_spec, set_mesh
+from repro.models.common import ModelConfig, named_sharding
+from repro.optim import OptConfig, adamw_init
+from repro.train import build_prefill_step, build_serve_step, build_train_step
+
+HW = {  # TPU v5e-like, per chip (spec'd constants)
+    "peak_flops": 197e12,        # bf16
+    "hbm_gbs": 819e9,
+    "ici_gbs": 50e9,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def abstract_init(model, rng):
+    """Shapes of params + the (static) spec tree, without allocating."""
+    box = {}
+
+    def init_only(r):
+        p, s = model.init(r)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(init_only, rng)
+    return shapes, box["specs"]
+
+
+def abstract_opt(params_shapes, specs, opt_cfg):
+    box = {}
+
+    def init_only(p):
+        st, ss = adamw_init(p, specs, opt_cfg)
+        box["specs"] = ss
+        return st
+
+    shapes = jax.eval_shape(init_only, params_shapes)
+    return shapes, box["specs"]
+
+
+def abstract_cache(model, batch, max_len, enc_len):
+    box = {}
+
+    def init_only():
+        c, s = model.init_cache(batch, max_len, enc_len=enc_len)
+        box["specs"] = s
+        return c
+
+    shapes = jax.eval_shape(init_only)
+    return shapes, box["specs"]
+
+
+def opt_config_for(cfg: ModelConfig) -> OptConfig:
+    big = cfg.params_count() >= 60e9
+    return OptConfig(factored=big, master_fp32=not big)
+
+
+def batch_specs(mesh, batch_shapes) -> Dict[str, Any]:
+    return jax.tree.map(
+        lambda s: named_sharding(mesh, P("data"), s.shape), batch_shapes)
+
+
+def model_flops(cfg: ModelConfig, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) reference FLOPs for the cell."""
+    n = cfg.params_count()
+    emb = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n_nonemb = n - emb
+    if cfg.family == "moe":
+        # active = experts reduced to top_k (+ shared)
+        mlp_all = n_nonemb
+        gated = 3 if cfg.act in ("swiglu", "geglu") else 2
+        expert_p = cfg.n_layers * cfg.n_experts * gated * cfg.d_model * cfg.d_ff
+        active_exp = expert_p * (cfg.top_k / cfg.n_experts)
+        n_active = n_nonemb - expert_p + active_exp
+    else:
+        n_active = n_nonemb
+    # decode processes 1 token/step; train does fwd+bwd (3x fwd cost)
+    tokens = shape.batch * (shape.seq if shape.kind in ("train", "prefill")
+                            else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n_active * tokens
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = "experiments/dryrun",
+             cfg_overrides: Dict[str, Any] = None,
+             tag: str = "") -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_mesh(mesh, logical_rules(multi_pod))
+    cfg = get_config(arch, **(cfg_overrides or {}))
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "tag": tag,
+    }
+    if not ok:
+        rec["status"] = "skip"
+        rec["reason"] = why
+        return rec
+
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    t0 = time.time()
+    params_sh, specs = abstract_init(model, rng)
+    pshard = jax.tree.map(
+        lambda s, p: named_sharding(mesh, s, p.shape), specs, params_sh,
+        is_leaf=lambda s: isinstance(s, P))
+    binp = input_specs(cfg, shape)
+    bshard = batch_specs(mesh, binp)
+
+    if shape.kind == "train":
+        opt_cfg = opt_config_for(cfg)
+        opt_sh, osspecs = abstract_opt(params_sh, specs, opt_cfg)
+        oshard = jax.tree.map(
+            lambda s, p: named_sharding(mesh, s, p.shape), osspecs, opt_sh,
+            is_leaf=lambda s: isinstance(s, P))
+        step = build_train_step(model, opt_cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1))
+        lowered = jitted.lower(params_sh, opt_sh, binp)
+    elif shape.kind == "prefill":
+        step = build_prefill_step(model)
+        jitted = jax.jit(step, in_shardings=(pshard, bshard))
+        lowered = jitted.lower(params_sh, binp)
+    else:  # decode
+        enc_len = max(cfg.frontend_len, 1024) if cfg.enc_layers else 0
+        cache_sh, cspecs = abstract_cache(model, shape.batch, shape.seq,
+                                          enc_len)
+        cshard = jax.tree.map(
+            lambda s, c: named_sharding(mesh, s, c.shape), cspecs, cache_sh,
+            is_leaf=lambda s: isinstance(s, P))
+        step = build_serve_step(model)
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, cshard, bshard["tokens"]),
+            out_shardings=(None, cshard),
+            donate_argnums=(1,))
+        lowered = jitted.lower(params_sh, cache_sh, binp["tokens"])
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # loop-aware accounting: xla's HloCostAnalysis counts while bodies once,
+    # which under-counts scanned layer stacks ~L-fold (see hlo_cost.py)
+    hc = hlo_analyze(hlo)
+    coll = {k: hc["collective_detail"].get(k, 0.0) for k in COLLECTIVES}
+    coll["counts"] = {}
+
+    ndev = 512 if multi_pod else 256
+    flops = float(hc["flops"])
+    bytes_acc = float(hc["bytes"])
+    mf = model_flops(cfg, shape)
+    # memory_analysis is per-device on this backend
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "devices": ndev,
+        "flops_total": flops,
+        "bytes_total": bytes_acc,
+        "model_flops": mf,
+        "collectives": coll,
+        "unknown_while": hc["unknown_while"],
+        "collective_top": [[k, v] for k, v in hc.get("collective_top", [])],
+        "xla_cost_raw": {"flops": float(cost.get("flops", 0.0)),
+                         "bytes": float(cost.get("bytes accessed", 0.0))},
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+        "params": cfg.params_count(),
+    })
+    # roofline terms (seconds); cost_analysis flops/bytes are whole-program
+    # (all devices execute the SPMD program; flops reported are per-program
+    # which equals per-device under SPMD)
+    rec["terms"] = {
+        "compute_s": flops / HW["peak_flops"],
+        "memory_s": bytes_acc / HW["hbm_gbs"],
+        "collective_s": float(hc["collective_bytes"]) / HW["ici_gbs"],
+    }
+    rec["dominant"] = max(rec["terms"], key=rec["terms"].get)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        name = f"{arch}__{shape_name}__{rec['mesh']}"
+        if tag:
+            name += f"__{tag}"
+        with open(os.path.join(out_dir, name + ".json"), "w") as f:
+            json.dump(rec, f, indent=2, default=float)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_NAMES + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--opt", default="",
+                    help="comma list: attn,moe,kv -> optimization flags")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    overrides = {}
+    if "attn" in args.opt:
+        overrides["opt_attn_layout"] = True
+    if "moe" in args.opt:
+        overrides["opt_moe_dispatch"] = True
+    if "kv" in args.opt:
+        overrides["opt_kv_quant"] = True
+
+    archs = ARCH_NAMES if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = run_cell(arch, shape, mp, args.out,
+                                   cfg_overrides=overrides, tag=args.tag)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                if rec["status"] == "ok":
+                    m = rec["memory"]
+                    print(f"[{rec['mesh']}] {arch:28s} {shape:12s} OK "
+                          f"compile={rec['compile_s']:6.1f}s "
+                          f"peak/dev={m['peak_bytes']/2**30:6.2f}GiB "
+                          f"dominant={rec['dominant']}", flush=True)
+                elif rec["status"] == "skip":
+                    print(f"[{rec['mesh']}] {arch:28s} {shape:12s} SKIP "
+                          f"({rec['reason']})", flush=True)
+                else:
+                    print(f"[{rec['mesh']}] {arch:28s} {shape:12s} FAIL "
+                          f"{rec['error']}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

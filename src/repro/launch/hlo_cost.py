@@ -1,0 +1,262 @@
+"""Loop-aware cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` (xla::HloCostAnalysis) visits every while body
+ONCE — with ``lax.scan`` over 96 layers that under-counts FLOPs / bytes /
+collective traffic by ~96x.  This module re-derives the three roofline terms
+from the optimized HLO text with execution counts propagated through the
+call graph:
+
+  * ``while`` multiplies body/condition counts by the trip count XLA records
+    in ``backend_config={"known_trip_count":{"n":N}}`` (statically known for
+    scan); unknown trips count once and are reported in ``unknown_while``;
+  * ``dot`` FLOPs = 2 * prod(output dims) * prod(lhs contracting dims),
+    operand shapes resolved through a per-computation symbol table;
+  * HBM-traffic bytes = operands + outputs of top-level (post-fusion)
+    instructions — what a fused kernel exchanges with memory.  Fusion
+    subcomputations contribute flops (their dots) but not bytes;
+  * collective bytes = operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute ('-done' ops skipped).
+
+Elementwise flops (reduce bodies, tanh, ...) are ignored — they are << dot
+flops for every cell in this system.  Validated against analytic FLOPs in
+tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+_INSTR_RE = re.compile(
+    r"^\s{2,}(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s([a-z][\w\-]*)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*\{\s*$")
+_CALL_KEYS = ("body=", "condition=", "calls=", "to_apply=",
+              "branch_computations=")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group(1)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+class Instr:
+    __slots__ = ("name", "out_type", "op", "rest", "line", "operands")
+
+    def __init__(self, name, out_type, op, rest, line):
+        self.name = name
+        self.out_type = out_type
+        self.op = op
+        self.rest = rest
+        self.line = line
+        # operand names: inside the top-level parens of the op call
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        self.operands = re.findall(r"%([\w.\-]+)", rest[:end])
+
+
+def parse_computations(hlo: str):
+    comps: Dict[str, List[Instr]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            cur = mc.group(2)
+            comps[cur] = []
+            if mc.group(1):
+                entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            comps[cur].append(Instr(mi.group(1), mi.group(2), mi.group(3),
+                                    mi.group(4), line))
+    return comps, entry
+
+
+def _trip_count(line: str) -> Optional[int]:
+    m = re.search(r'known_trip_count[\\"]*:\s*[{\\"]*n[\\"]*:[\\"]*(\d+)',
+                  line)
+    return int(m.group(1)) if m else None
+
+
+def _called_comps(line: str) -> List[str]:
+    out = []
+    for key in _CALL_KEYS:
+        for m in re.finditer(re.escape(key) + r"(\{[^}]*\}|%[\w.\-]+)", line):
+            out += re.findall(r"%([\w.\-]+)", m.group(1))
+    return out
+
+
+def analyze(hlo: str) -> Dict[str, float]:
+    comps, entry = parse_computations(hlo)
+    if not comps:
+        return {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0,
+                "collective_detail": {}, "unknown_while": 0}
+    if entry is None:
+        entry = next(iter(comps))
+
+    # symbol tables: instruction name -> output type (params included)
+    symbols: Dict[str, Dict[str, str]] = {}
+    for name, instrs in comps.items():
+        symbols[name] = {i.name: i.out_type for i in instrs}
+
+    exec_count: Dict[str, float] = {n: 0.0 for n in comps}
+    fusion_body: Set[str] = set()
+    unknown_while = 0
+
+    def visit(name: str, mult: float):
+        nonlocal unknown_while
+        if name not in comps:
+            return
+        exec_count[name] += mult
+        for instr in comps[name]:
+            called = [c for c in _called_comps(instr.line) if c in comps]
+            if not called:
+                continue
+            child_mult = mult
+            if instr.op == "while":
+                trip = _trip_count(instr.line)
+                if trip is None:
+                    trip = 1
+                    unknown_while += 1
+                child_mult = mult * trip
+            for c in set(called):
+                if instr.op == "fusion" or "to_apply=" in instr.line:
+                    fusion_body.add(c)
+                visit(c, child_mult)
+
+    visit(entry, 1.0)
+
+    # Slice-aware read model: ops that address into a large operand read only
+    # their output-sized window, NOT the whole operand (critical for scan,
+    # which dynamic-slices one layer out of the stacked (L, ...) params
+    # every iteration — charging the full stack would overcount ~L-fold).
+    SLICE_READS = ("dynamic-slice", "slice", "gather", "reshape", "broadcast",
+                   "iota", "transpose", "reverse")
+
+    def _op_bytes(instr: Instr, table: Dict[str, str]) -> float:
+        out_b = _shape_bytes(instr.out_type)
+        if instr.op in SLICE_READS:
+            return 2.0 * out_b                      # read window + write out
+        if instr.op == "dynamic-update-slice" and len(instr.operands) >= 2:
+            upd = _shape_bytes(table.get(instr.operands[1], ""))
+            return 2.0 * upd                        # read update + write window
+        if instr.op == "scatter" and len(instr.operands) >= 3:
+            upd = _shape_bytes(table.get(instr.operands[2], ""))
+            return 3.0 * upd                        # read+write region + updates
+        if instr.op == "fusion":
+            return out_b + _fusion_reads(instr, table)
+        opnd = sum(_shape_bytes(table.get(o, "")) for o in instr.operands)
+        return out_b + opnd
+
+    def _fusion_reads(instr: Instr, table: Dict[str, str]) -> float:
+        """Bytes a fused kernel reads: parameters consumed only through
+        slice-like inner ops contribute the slice window, not full size."""
+        called = [c for c in _called_comps(instr.line) if c in comps]
+        if not called:
+            return sum(_shape_bytes(table.get(o, "")) for o in instr.operands)
+        body = comps[called[0]]
+        # map parameter index -> instruction name
+        param_names = {}
+        for bi in body:
+            if bi.op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", bi.line)
+                if m:
+                    param_names[int(m.group(1))] = bi.name
+        total = 0.0
+        for idx, op_name in enumerate(instr.operands):
+            pname = param_names.get(idx)
+            full = _shape_bytes(table.get(op_name, ""))
+            if pname is None:
+                total += full
+                continue
+            consumers = [bi for bi in body if pname in bi.operands]
+            if consumers and all(c.op in SLICE_READS for c in consumers):
+                total += sum(_shape_bytes(c.out_type) for c in consumers)
+            else:
+                total += full
+        return total
+
+    flops = 0.0
+    bytes_hbm = 0.0
+    coll_bytes = 0.0
+    coll_detail: Dict[str, float] = {c: 0.0 for c in COLLECTIVE_OPS}
+    coll_top: Dict[str, float] = {}
+    for name, instrs in comps.items():
+        mult = exec_count.get(name, 0.0)
+        if mult <= 0:
+            continue
+        table = symbols[name]
+        for instr in instrs:
+            if instr.op in ("dot", "convolution") and instr.operands:
+                out_m = _SHAPE_RE.search(instr.out_type)
+                lhs_t = table.get(instr.operands[0], "")
+                lhs_m = _SHAPE_RE.search(lhs_t)
+                if out_m and lhs_m:
+                    out_elems = 1
+                    for d in out_m.group(2).split(","):
+                        if d:
+                            out_elems *= int(d)
+                    lhs_dims = [int(d) for d in lhs_m.group(2).split(",")
+                                if d]
+                    mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                                    instr.line)
+                    contract = 1
+                    if mcd and mcd.group(1):
+                        for d in mcd.group(1).split(","):
+                            contract *= lhs_dims[int(d)]
+                    flops += mult * 2.0 * out_elems * contract
+            if name in fusion_body:
+                continue               # bytes accounted at the fusion call
+            if instr.op in ("parameter", "constant", "get-tuple-element",
+                            "tuple", "bitcast", "after-all", "partition-id",
+                            "replica-id", "copy-start", "copy-done"):
+                continue
+            base = instr.op.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVE_OPS:
+                if instr.op.endswith("-done"):
+                    continue
+                b = sum(_shape_bytes(table.get(o, "")) for o in
+                        instr.operands)
+                coll_bytes += mult * b
+                coll_detail[base] += mult * b
+                key = f"{base} {instr.out_type.strip()} x{mult:g}"
+                coll_top[key] = coll_top.get(key, 0.0) + mult * b
+                continue
+            bytes_hbm += mult * _op_bytes(instr, table)
+    top = sorted(coll_top.items(), key=lambda kv: -kv[1])[:12]
+    return {"flops": flops, "bytes": bytes_hbm,
+            "collective_bytes": coll_bytes,
+            "collective_detail": coll_detail,
+            "collective_top": top,
+            "unknown_while": unknown_while}

@@ -1,0 +1,31 @@
+"""Production mesh definitions.
+
+A function, not a module constant: importing this module never touches jax
+device state.  Single pod = 16x16 (256 chips, v5e pod); multi-pod adds a
+leading ``pod`` axis (2 pods = 512 chips).  The logical "data" axis used by
+model/optimizer specs resolves to ("pod", "data") on the multi-pod mesh so
+batch/FSDP sharding composes across pods (see models.common.set_mesh).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def logical_rules(multi_pod: bool) -> Dict[str, Tuple[str, ...]]:
+    return {"data": ("pod", "data") if multi_pod else ("data",),
+            "model": ("model",)}
+
+
+def data_axis_size(mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.shape:
+        n *= mesh.shape["pod"]
+    return n

@@ -1,0 +1,5 @@
+from .common import ModelConfig, set_mesh, get_mesh, resolve_spec, constrain
+from .transformer import Model, build_model
+
+__all__ = ["ModelConfig", "Model", "build_model", "set_mesh", "get_mesh",
+           "resolve_spec", "constrain"]

@@ -1,0 +1,293 @@
+"""Shared building blocks for the model zoo.
+
+Parameters are plain nested dicts of jnp arrays; every ``init_*`` function
+returns ``(params, specs)`` where ``specs`` mirrors the params tree with
+``jax.sharding.PartitionSpec`` leaves.  Mesh axis conventions:
+
+* ``data`` (+ ``pod`` when present)  — batch / FSDP axis (name: AX_DATA)
+* ``model``                          — tensor-parallel axis (heads, d_ff, experts, vocab)
+
+``fsdp=True`` additionally shards the *first non-model* weight axis over the
+data axis (GSPMD re-gathers per scan step), which is what lets the 132B-400B
+archs fit 256 chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+AX_MODEL = "model"
+AX_DATA = "data"          # resolved to ("pod","data") on multi-pod meshes
+
+# --- logical -> physical axis resolution -----------------------------------
+# Specs are written with logical names ("data", "model"); the launch layer
+# registers the active mesh + mapping (multi-pod maps "data" -> (pod, data)).
+_MESH = None
+_LOGICAL = {"data": ("data",), "model": ("model",)}
+
+
+def set_mesh(mesh, logical: Optional[Dict[str, Tuple[str, ...]]] = None):
+    global _MESH, _LOGICAL
+    _MESH = mesh
+    if logical is not None:
+        _LOGICAL = dict(logical)
+
+
+def get_mesh():
+    return _MESH
+
+
+def resolve_spec(spec: P) -> P:
+    """Map logical axis names in a PartitionSpec to physical mesh axes."""
+    out = []
+    for part in spec:
+        if part is None:
+            out.append(None)
+        elif isinstance(part, str):
+            phys = _LOGICAL.get(part, (part,))
+            out.append(phys[0] if len(phys) == 1 else phys)
+        else:  # tuple of logical names
+            phys: Tuple[str, ...] = ()
+            for q in part:
+                phys += _LOGICAL.get(q, (q,))
+            out.append(phys)
+    return P(*out)
+
+
+def _axes_size(mesh, part) -> int:
+    names = (part,) if isinstance(part, str) else tuple(part)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Make a resolved spec legal for `shape` on `mesh`.
+
+    Mesh axes on non-divisible dims are removed and, when possible, relocated
+    to another unsharded dim that divides — e.g. deepseek's 56 heads cannot
+    split 16 ways, so the model axis moves to head_dim (128); seamless's
+    256206-row vocab moves the model axis to d_model.
+    """
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    parts = parts[: len(shape)]
+    homeless = []
+    for i, part in enumerate(parts):
+        if part is None:
+            continue
+        if shape[i] % _axes_size(mesh, part) != 0:
+            # try dropping individual axes before evicting all of them
+            names = (part,) if isinstance(part, str) else list(part)
+            keep = []
+            for a in names:
+                trial = keep + [a]
+                if shape[i] % _axes_size(mesh, tuple(trial)) == 0:
+                    keep = trial
+                else:
+                    homeless.append(a)
+            parts[i] = None if not keep else (
+                keep[0] if len(keep) == 1 else tuple(keep))
+    for a in homeless:
+        used = set()
+        for p in parts:
+            if p is not None:
+                used.update((p,) if isinstance(p, str) else p)
+        if a in used:
+            continue
+        for i, part in enumerate(parts):
+            if part is None and shape[i] % mesh.shape[a] == 0 and shape[i] > 1:
+                parts[i] = a
+                break
+    return P(*parts)
+
+
+def named_sharding(mesh, spec: P, shape):
+    return jax.sharding.NamedSharding(
+        mesh, sanitize_spec(resolve_spec(spec), shape, mesh))
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint against the registered mesh (no-op outside)."""
+    if _MESH is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, named_sharding(_MESH, spec, x.shape))
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    act: str = "swiglu"            # swiglu | geglu | relu2 | gelu
+    attn: str = "full"             # full | swa | chunked
+    window: int = 4096             # swa window / chunk size
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    router: str = "topk"           # topk | matching  (paper technique)
+    capacity_factor: float = 1.25
+    moe_every: int = 1             # MoE layer every k-th block (1 = all)
+    moe_shared_expert: bool = False  # always-on shared expert (llama4)
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+    # hybrid: one shared attention block every `shared_every` mamba blocks
+    shared_every: int = 0
+    # encoder-decoder
+    enc_layers: int = 0
+    # frontends (stubbed per spec: input_specs provides embeddings)
+    frontend: str = ""             # "" | "audio" | "vision"
+    frontend_len: int = 256        # patches / frames prepended
+    # numerics / partitioning
+    dtype: str = "bfloat16"
+    fsdp: bool = False
+    remat: bool = True
+    attn_impl: str = "xla"         # xla | pallas (flash kernel)
+    # --- beyond-baseline performance knobs (EXPERIMENTS.md §Perf) ---------
+    # H-flat attention layout: fold GQA groups into the head axis so score
+    # tensors shard cleanly H-over-model (fixes involuntary resharding).
+    opt_attn_layout: bool = False
+    # locality-first MoE dispatch: per-data-shard routing + local scatter,
+    # single all-to-all reshard to expert-parallel layout (replaces the
+    # full-buffer all-reduce pattern GSPMD derives from global scatters).
+    opt_moe_dispatch: bool = False
+    # int8 KV cache with per-(layer,head) scales: halves decode HBM traffic.
+    opt_kv_quant: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def dec_layers(self) -> int:
+        return self.n_layers
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def params_count(self) -> int:
+        """Analytic parameter count (embeddings included once)."""
+        D, F, V, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        H, KV, hd = self.n_heads, self.n_kv_heads, self.hd
+        attn = D * hd * (H + 2 * KV) + H * hd * D
+        if self.act in ("swiglu", "geglu"):
+            mlp = 3 * D * F
+        else:
+            mlp = 2 * D * F
+        per = attn + 2 * D
+        if self.family == "moe":
+            moe_l = self.n_experts * mlp + D * self.n_experts
+            n_moe = L // self.moe_every
+            per_total = L * per + n_moe * moe_l + (L - n_moe) * mlp
+        elif self.family == "ssm":
+            di, N, Hs = self.d_inner, self.ssm_state, self.ssm_heads
+            per = (D * (2 * di + 2 * N + Hs)      # in_proj (z,x,B,C,dt)
+                   + di * D + 2 * D)              # out_proj + norms
+            per_total = L * per
+        elif self.family == "hybrid":
+            di, N, Hs = self.d_inner, self.ssm_state, self.ssm_heads
+            mamba = D * (2 * di + 2 * N + Hs) + di * D + 2 * D
+            n_shared = 1 if self.shared_every else 0
+            per_total = L * mamba + n_shared * (attn + mlp + 2 * D)
+        else:
+            per_total = L * (per + mlp)
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        if self.enc_layers:
+            per_total += self.enc_layers * (attn + mlp + 2 * D)
+            per_total += self.n_layers * attn     # cross attention
+        return per_total + emb
+
+
+# ---------------------------------------------------------------------------
+# initializers / specs
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, in_axis: int = 0) -> jnp.ndarray:
+    fan_in = np.prod([shape[i] for i in ([in_axis] if isinstance(in_axis, int)
+                                         else in_axis)])
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def fsdp_spec(spec: P, cfg: ModelConfig) -> P:
+    """Shard the first unsharded axis over data when FSDP is on."""
+    if not cfg.fsdp:
+        return spec
+    parts = list(spec)
+    for i, p in enumerate(parts):
+        if p is None:
+            parts[i] = AX_DATA
+            return P(*parts)
+    return spec
+
+
+def rms_norm(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def activate(act: str, h, g=None):
+    if act == "swiglu":
+        return jax.nn.silu(g) * h
+    if act == "geglu":
+        return jax.nn.gelu(g) * h
+    if act == "relu2":                       # Nemotron-4 squared ReLU
+        return jnp.square(jax.nn.relu(h))
+    if act == "gelu":
+        return jax.nn.gelu(h)
+    raise ValueError(act)
+
+
+def rope(q, k, pos, theta: float):
+    """Rotary embeddings; q,k: (..., S, H, hd), pos: (..., S) int32."""
+    hd = q.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = pos[..., :, None].astype(jnp.float32) * freqs   # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                      # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+
+    def rot(x):
+        x1, x2 = x[..., :half], x[..., half:]
+        xd = x.dtype
+        x1, x2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+        return jnp.concatenate([x1 * cos - x2 * sin,
+                                x2 * cos + x1 * sin], -1).astype(xd)
+
+    return rot(q), rot(k)
+
+
+def tree_size(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))

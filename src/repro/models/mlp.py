@@ -1,0 +1,38 @@
+"""Dense feed-forward blocks: SwiGLU / GeGLU / squared-ReLU / GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import AX_DATA, AX_MODEL, ModelConfig, dense_init, fsdp_spec
+
+
+def init_mlp(key, cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    dt = cfg.jdtype
+    gated = cfg.act in ("swiglu", "geglu")
+    ks = jax.random.split(key, 3)
+    params = {"w_in": dense_init(ks[0], (D, F), dt),
+              "w_out": dense_init(ks[1], (F, D), dt)}
+    specs = {"w_in": fsdp_spec(P(None, AX_MODEL), cfg),
+             "w_out": fsdp_spec(P(AX_MODEL, None), cfg)}
+    if gated:
+        params["w_gate"] = dense_init(ks[2], (D, F), dt)
+        specs["w_gate"] = fsdp_spec(P(None, AX_MODEL), cfg)
+    return params, specs
+
+
+def mlp(params, x, cfg: ModelConfig):
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    if cfg.act in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        if cfg.act == "swiglu":
+            h = jax.nn.silu(g) * h
+        else:
+            h = jax.nn.gelu(g) * h
+    elif cfg.act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"])

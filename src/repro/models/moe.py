@@ -1,0 +1,235 @@
+"""Mixture-of-Experts layer: slot-table dispatch + top-k/matching routers.
+
+Dispatch is scatter-based (MegaBlocks-style slot table), not the (T, E, C)
+one-hot einsum of GShard — the one-hot dispatch tensor would be ~10 TB for
+llama4-maverick's train_4k cell, the slot table is O(E*C*D):
+
+  route   : logits -> (assign, slot, prob) per (token, choice)
+  dispatch: scatter tokens into an (E, C, D) expert buffer (XLA -> all-to-all
+            when tokens are data-sharded and experts model-sharded)
+  expert  : grouped GEMMs over the buffer (E sharded over `model` = EP)
+  combine : gather expert outputs back per (token, choice), weight, sum.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.moe import route_matching, route_topk
+
+from .common import AX_DATA, AX_MODEL, ModelConfig, constrain, dense_init, fsdp_spec
+
+
+def init_moe(key, cfg: ModelConfig):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 7)
+    gated = cfg.act in ("swiglu", "geglu")
+    params = {
+        "router": dense_init(ks[0], (D, E), jnp.float32),
+        "w_in": dense_init(ks[1], (E, D, F), dt),
+        "w_out": dense_init(ks[2], (E, F, D), dt),
+    }
+    if cfg.opt_moe_dispatch:
+        # §Perf iteration 2b: FSDP on the *non-contracted* dim of w_in and on
+        # the h-matching dim of w_out — the default (data on D) makes BOTH
+        # expert matmuls partial-sum over the data axis and all-reduce the
+        # (E, C, ·) hidden tensors (2.1 TiB/step for dbrx, see EXPERIMENTS).
+        specs = {
+            "router": P(None, None),
+            "w_in": P(AX_MODEL, None, AX_DATA) if cfg.fsdp
+            else P(AX_MODEL, None, None),
+            "w_out": P(AX_MODEL, AX_DATA, None) if cfg.fsdp
+            else P(AX_MODEL, None, None),
+        }
+        if gated:
+            params["w_gate"] = dense_init(ks[3], (E, D, F), dt)
+            specs["w_gate"] = specs["w_in"]
+    else:
+        specs = {
+            "router": P(None, None),
+            "w_in": fsdp_spec(P(AX_MODEL, None, None), cfg),
+            "w_out": fsdp_spec(P(AX_MODEL, None, None), cfg),
+        }
+        if gated:
+            params["w_gate"] = dense_init(ks[3], (E, D, F), dt)
+            specs["w_gate"] = fsdp_spec(P(AX_MODEL, None, None), cfg)
+    if cfg.moe_shared_expert:
+        # llama4-style always-on shared expert (dense FFN in parallel)
+        params["sh_in"] = dense_init(ks[4], (D, F), dt)
+        params["sh_out"] = dense_init(ks[5], (F, D), dt)
+        specs["sh_in"] = fsdp_spec(P(None, AX_MODEL), cfg)
+        specs["sh_out"] = fsdp_spec(P(AX_MODEL, None), cfg)
+        if gated:
+            params["sh_gate"] = dense_init(ks[6], (D, F), dt)
+            specs["sh_gate"] = fsdp_spec(P(None, AX_MODEL), cfg)
+    return params, specs
+
+
+def capacity_for(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(math.ceil(cfg.capacity_factor * n_tokens * cfg.top_k
+                      / cfg.n_experts))
+    return max(8, ((c + 7) // 8) * 8)                   # lane-align
+
+
+def _expert_ffn(params, buf, cfg: ModelConfig):
+    h = jnp.einsum("ecd,edf->ecf", buf, params["w_in"])
+    if cfg.act in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+        h = (jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)) * h
+    elif cfg.act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, params["w_out"])
+
+
+def moe_ffn_local_dispatch(params, x, cfg: ModelConfig
+                           ) -> Tuple[jnp.ndarray, dict]:
+    """§Perf variant (opt_moe_dispatch): locality-first expert dispatch.
+
+    The baseline scatters data-sharded tokens straight into a model-sharded
+    (E*C, D) buffer; GSPMD lowers that to *full-buffer fp32 all-reduces* per
+    layer (960 GiB/layer-step for dbrx train_4k — EXPERIMENTS.md §Perf).
+    Here every data shard routes and scatters LOCALLY into its own
+    (E, C_loc, D) slab (no cross-device traffic), and a single bf16
+    all-to-all reshards (shards, E, C_loc, D) from data-sharded shards to
+    model-sharded experts.  Routing becomes per-shard (capacity C/shards
+    each), which is also the realistic EP semantics at scale.
+    """
+    from repro.models.common import get_mesh, _LOGICAL
+    B, S, D = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    mesh = get_mesh()
+    shards = 1
+    if mesh is not None:
+        for ax in _LOGICAL["data"]:
+            shards *= mesh.shape[ax]
+    if T % shards:
+        shards = 1
+    T_loc = T // shards
+    C_loc = capacity_for(cfg, T_loc)
+
+    xt = x.reshape(shards, T_loc, D)
+    xt = constrain(xt, P(AX_DATA, None, None))
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        params["router"])
+    route = route_matching if cfg.router == "matching" else route_topk
+    assign, slot, prob = jax.vmap(lambda l: route(l, k, C_loc))(logits)
+
+    # local scatter into per-shard slabs (leading dim stays data-sharded)
+    flat_e = assign.reshape(shards, T_loc * k)
+    flat_s = slot.reshape(shards, T_loc * k)
+    keep = flat_e >= 0
+    slot_id = jnp.where(keep, flat_e * C_loc + flat_s, E * C_loc)
+    # instance i corresponds to token i//k: a broadcast, not a gather
+    gathered_x = jnp.broadcast_to(xt[:, :, None], (shards, T_loc, k, D)
+                                  ).reshape(shards, T_loc * k, D)
+    buf = jax.vmap(lambda sid, xg:
+                   jnp.zeros((E * C_loc + 1, D), x.dtype).at[sid].set(xg))(
+        slot_id, gathered_x)
+    buf = buf[:, : E * C_loc].reshape(shards, E, C_loc, D)
+
+    # THE reshard: data-sharded shards -> model-sharded experts (all-to-all).
+    # Keep the shards axis through the einsums — reshaping across a sharded
+    # dim forces a relayout (measured: +900 GiB collective-permute).
+    bufe = constrain(buf.transpose(1, 0, 2, 3),
+                     P(AX_MODEL, None, None, None))      # (E, shards, C, D)
+    h = jnp.einsum("escd,edf->escf", bufe, params["w_in"])
+    if cfg.act in ("swiglu", "geglu"):
+        g = jnp.einsum("escd,edf->escf", bufe, params["w_gate"])
+        h = (jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)) * h
+    elif cfg.act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    out_e = jnp.einsum("escf,efd->escd", h, params["w_out"])
+
+    # back to data-sharded shards (all-to-all), local gather + combine
+    out_s = constrain(out_e.transpose(1, 0, 2, 3),
+                      P(AX_DATA, None, None, None)).reshape(
+                          shards, E * C_loc, D)
+    picked = jax.vmap(lambda o, sid: o[jnp.clip(sid, 0, E * C_loc - 1)])(
+        out_s, slot_id)
+    picked = jnp.where(keep[..., None], picked, 0.0)
+    w = prob.reshape(shards, T_loc * k, 1).astype(x.dtype)
+    # combine: instances of one token are contiguous -> reshape-sum (the
+    # scatter-add equivalent, but with no scatter and no u32/f32 all-reduce
+    # in its backward — §Perf iteration 2c)
+    out = (picked * w).reshape(shards, T_loc, k, D).sum(axis=2)
+
+    me = jax.nn.softmax(logits, -1).mean((0, 1))
+    onehot = (jax.nn.one_hot(jnp.clip(assign, 0, E - 1), E)
+              * (assign >= 0)[..., None]).sum((0, 1, 2)) / max(1, T * k)
+    aux = {"lb_loss": E * jnp.sum(me * onehot),
+           "drop_rate": 1.0 - keep.sum() / (T * k)}
+    out = out.reshape(B, S, D)
+    if cfg.moe_shared_expert:
+        h = jnp.einsum("bsd,df->bsf", x, params["sh_in"])
+        if cfg.act in ("swiglu", "geglu"):
+            g = jnp.einsum("bsd,df->bsf", x, params["sh_gate"])
+            h = (jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)) * h
+        else:
+            h = jax.nn.gelu(h)
+        out = out + jnp.einsum("bsf,fd->bsd", h, params["sh_out"])
+    return out, aux
+
+
+def moe_ffn(params, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, D) -> (B, S, D), aux metrics (load-balance loss, drops)."""
+    if cfg.opt_moe_dispatch:
+        return moe_ffn_local_dispatch(params, x, cfg)
+    B, S, D = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity_for(cfg, T)
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"])
+    if cfg.router == "matching":
+        assign, slot, prob = route_matching(logits, k, C)
+    else:
+        assign, slot, prob = route_topk(logits, k, C)
+
+    # ---- dispatch: scatter instances into (E*C+1, D); last row = dump ----
+    flat_e = assign.reshape(T * k)
+    flat_s = slot.reshape(T * k)
+    keep = flat_e >= 0
+    slot_id = jnp.where(keep, flat_e * C + flat_s, E * C)
+    tok_ix = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot_id].set(xt[tok_ix])
+    buf = constrain(buf[: E * C].reshape(E, C, D), P(AX_MODEL, None, None))
+
+    out_buf = _expert_ffn(params, buf, cfg)
+
+    # ---- combine: gather back, weight, sum over choices -------------------
+    out_flat = out_buf.reshape(E * C, D)
+    gathered = jnp.where(keep[:, None],
+                         out_flat[jnp.clip(slot_id, 0, E * C - 1)], 0.0)
+    w = prob.reshape(T * k, 1).astype(x.dtype)
+    out = jnp.zeros((T, D), x.dtype).at[tok_ix].add(gathered * w)
+
+    # load-balance auxiliary loss (Switch style) + drop metric
+    me = jax.nn.softmax(logits, -1).mean(0)
+    onehot = (jax.nn.one_hot(jnp.clip(assign, 0, E - 1), E)
+              * (assign >= 0)[..., None]).sum((0, 1)) / max(1, T * k)
+    aux = {
+        "lb_loss": E * jnp.sum(me * onehot),
+        "drop_rate": 1.0 - keep.sum() / (T * k),
+    }
+    out = out.reshape(B, S, D)
+    if cfg.moe_shared_expert:
+        h = jnp.einsum("bsd,df->bsf", x, params["sh_in"])
+        if cfg.act in ("swiglu", "geglu"):
+            g = jnp.einsum("bsd,df->bsf", x, params["sh_gate"])
+            h = (jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)) * h
+        else:
+            h = jax.nn.gelu(h)
+        out = out + jnp.einsum("bsf,fd->bsd", h, params["sh_out"])
+    return out, aux

@@ -1,0 +1,189 @@
+"""Mamba-2 (SSD, arXiv:2405.21060) block: chunked training scan + O(1) decode.
+
+The SSD form computes, per head h with scalar decay a_t = exp(dt_t * A_h):
+
+  h_t = a_t * h_{t-1} + dt_t * B_t (x) x_t         (state:  (hd, N))
+  y_t = C_t . h_t + D_h * x_t
+
+Training/prefill uses the chunked algorithm: within chunks of Q tokens the
+recurrence is expanded into a masked quadratic form (MXU-friendly), states
+are passed between chunks with a short ``lax.scan`` — O(S*Q) work, O(S) mem.
+Decode is the literal recurrence (one step).  Group count G=1 (B/C shared
+across heads), matching Mamba2/Zamba2 publications.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import AX_DATA, AX_MODEL, ModelConfig, constrain, dense_init, fsdp_spec
+
+CHUNK = 256
+
+
+def init_mamba(key, cfg: ModelConfig):
+    D, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H, K = cfg.ssm_heads, cfg.ssm_conv
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 10)
+    params = {
+        "wz": dense_init(ks[0], (D, di), dt),
+        "wx": dense_init(ks[1], (D, di), dt),
+        "wB": dense_init(ks[2], (D, N), dt),
+        "wC": dense_init(ks[3], (D, N), dt),
+        "wdt": dense_init(ks[4], (D, H), dt),
+        "conv_x": dense_init(ks[5], (K, di), dt),
+        "conv_B": dense_init(ks[6], (K, N), dt),
+        "conv_C": dense_init(ks[7], (K, N), dt),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "Dp": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "norm": jnp.zeros((di,), jnp.float32),
+        "out": dense_init(ks[8], (di, D), dt),
+    }
+    specs = {
+        "wz": fsdp_spec(P(None, AX_MODEL), cfg),
+        "wx": fsdp_spec(P(None, AX_MODEL), cfg),
+        "wB": P(None, None), "wC": P(None, None),
+        "wdt": P(None, AX_MODEL),
+        "conv_x": P(None, AX_MODEL), "conv_B": P(None, None),
+        "conv_C": P(None, None),
+        "A_log": P(AX_MODEL), "Dp": P(AX_MODEL), "dt_bias": P(AX_MODEL),
+        "norm": P(AX_MODEL),
+        "out": fsdp_spec(P(AX_MODEL, None), cfg),
+    }
+    return params, specs
+
+
+def _causal_conv(x, w):
+    """x: (B, S, C); w: (K, C) depthwise causal convolution."""
+    K = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + pads[:, i: i + x.shape[1]] * w[i]
+    return out
+
+
+def _gated_norm(y, z, scale, eps):
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    return (y.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            * (1.0 + scale)).astype(y.dtype)
+
+
+def mamba_forward(params, x, cfg: ModelConfig, h0=None):
+    """Full-sequence SSD. x: (B, S, D) -> (B, S, D), final state (B,H,hd,N)."""
+    B, S, D = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    H, hd = cfg.ssm_heads, cfg.ssm_headdim
+    Q = min(CHUNK, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    z = jnp.einsum("bsd,de->bse", x, params["wz"])
+    xs = _causal_conv(jnp.einsum("bsd,de->bse", x, params["wx"]),
+                      params["conv_x"])
+    Bc = _causal_conv(jnp.einsum("bsd,dn->bsn", x, params["wB"]),
+                      params["conv_B"])
+    Cc = _causal_conv(jnp.einsum("bsd,dn->bsn", x, params["wC"]),
+                      params["conv_C"])
+    xs, Bc, Cc = jax.nn.silu(xs), jax.nn.silu(Bc), jax.nn.silu(Cc)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, params["wdt"]).astype(jnp.float32)
+        + params["dt_bias"])                                   # (B,S,H)
+    A = -jnp.exp(params["A_log"])                              # (H,)
+
+    xh = xs.reshape(B, nc, Q, H, hd)
+    xh = constrain(xh, P(AX_DATA, None, None, AX_MODEL, None))
+    Bh = Bc.reshape(B, nc, Q, N)
+    Ch = Cc.reshape(B, nc, Q, N)
+    dth = dt.reshape(B, nc, Q, H)
+    dA = dth * A                                               # (B,nc,Q,H) <0
+    seg = jnp.cumsum(dA, axis=2)                               # within-chunk
+
+    # ---- intra-chunk (quadratic, causal-masked) ---------------------------
+    decay = jnp.exp(seg[:, :, :, None, :] - seg[:, :, None, :, :])  # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], decay, 0.0)
+    cb = jnp.einsum("bcqn,bctn->bcqt", Ch, Bh)                 # (B,nc,Q,Q)
+    att = cb[..., None] * decay * dth[:, :, None, :, :]        # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcqth,bcthp->bcqhp", att.astype(x.dtype), xh)
+
+    # ---- chunk states + inter-chunk scan ----------------------------------
+    chunk_decay = jnp.exp(seg[:, :, -1:, :] - seg)             # (B,nc,Q,H)
+    states = jnp.einsum("bcth,bctn,bcthp->bchpn",
+                        (chunk_decay * dth).astype(x.dtype), Bh.astype(x.dtype), xh)
+    total = jnp.exp(seg[:, :, -1, :])                          # (B,nc,H)
+
+    def chunk_step(h, inp):
+        st, tot = inp                                          # (B,H,hd,N),(B,H)
+        h_new = h * tot[..., None, None].astype(h.dtype) + st
+        return h_new, h                                        # emit h_{c-1}
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, hd, N), x.dtype)
+    h_last, h_prevs = jax.lax.scan(
+        chunk_step, h0,
+        (states.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                 # (B,nc,H,hd,N)
+
+    inter_decay = jnp.exp(seg)                                 # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", Ch.astype(x.dtype), h_prevs) \
+        * inter_decay[..., None].astype(x.dtype)
+
+    y = (y_intra + y_inter).reshape(B, S, di) \
+        + xs * params["Dp"].repeat(hd)[None, None, :].astype(x.dtype)
+    y = _gated_norm(y, z, params["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["out"]), h_last
+
+
+def init_ssm_cache(cfg: ModelConfig, n_layers: int, batch: int, dtype=None):
+    dtype = dtype or cfg.jdtype
+    H, hd, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    K, di = cfg.ssm_conv, cfg.d_inner
+    return {
+        "h": jnp.zeros((n_layers, batch, H, hd, N), dtype),
+        "conv": jnp.zeros((n_layers, batch, K - 1, di + 2 * cfg.ssm_state),
+                          dtype),
+    }
+
+
+def ssm_cache_specs(cfg: ModelConfig):
+    return {"h": P(None, AX_DATA, AX_MODEL, None, None),
+            "conv": P(None, AX_DATA, None, None)}
+
+
+def mamba_decode_step(params, x, h, conv_state, cfg: ModelConfig):
+    """One-token recurrence. x: (B,1,D); h: (B,H,hd,N); conv: (B,K-1,di+2N)."""
+    B = x.shape[0]
+    di, N = cfg.d_inner, cfg.ssm_state
+    H, hd = cfg.ssm_heads, cfg.ssm_headdim
+    z = jnp.einsum("bsd,de->bse", x, params["wz"])[:, 0]
+    xBC = jnp.concatenate([
+        jnp.einsum("bsd,de->bse", x, params["wx"]),
+        jnp.einsum("bsd,dn->bsn", x, params["wB"]),
+        jnp.einsum("bsd,dn->bsn", x, params["wC"])], -1)[:, 0]  # (B,di+2N)
+    hist = jnp.concatenate([conv_state, xBC[:, None]], 1)       # (B,K,·)
+    w = jnp.concatenate([params["conv_x"], params["conv_B"],
+                         params["conv_C"]], 1)                  # (K, di+2N)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, w)
+    conv_state = hist[:, 1:]
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[:, :di].reshape(B, H, hd)
+    Bc = conv_out[:, di:di + N]
+    Cc = conv_out[:, di + N:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, params["wdt"])[:, 0].astype(jnp.float32)
+        + params["dt_bias"])                                    # (B,H)
+    A = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt * A)                                        # (B,H)
+    h = h * da[..., None, None].astype(h.dtype) + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt.astype(x.dtype), xs, Bc)
+    y = jnp.einsum("bhpn,bn->bhp", h, Cc) + xs * params["Dp"][None, :, None].astype(x.dtype)
+    y = _gated_norm(y.reshape(B, di), z, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, params["out"])[:, None]
+    return out, h, conv_state

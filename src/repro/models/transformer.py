@@ -1,0 +1,417 @@
+"""Model assembly: decoder-only LM, MoE LM, SSM, hybrid, enc-dec, VLM.
+
+Layer stacks are ``lax.scan`` over parameters stacked on a leading L axis —
+this keeps the 512-device HLO compact (one block body) and is what remat
+wants.  ``build_model(cfg)`` returns a ``Model`` with:
+
+  init(rng)                  -> (params, specs)
+  forward(params, batch)     -> logits                   (train / prefill)
+  init_cache(batch, max_len) -> (cache, cache_specs)
+  decode_step(params, cache, tokens, pos) -> (logits, cache)
+
+``batch`` is a dict: {"tokens": (B,S) int32} plus, for stub frontends,
+{"frontend": (B, F, D) embeddings} and for enc-dec {"enc_frames": (B,Se,D)}.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as att
+from . import mlp as mlp_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .common import (AX_DATA, AX_MODEL, ModelConfig, constrain, dense_init,
+                     fsdp_spec, rms_norm)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def init_block(key, cfg: ModelConfig, kind: str, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    params: Dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+                              "ln2": jnp.zeros((cfg.d_model,), jnp.float32)}
+    specs: Dict[str, Any] = {"ln1": P(None), "ln2": P(None)}
+    if kind == "mamba":
+        params["mix"], specs["mix"] = ssm_mod.init_mamba(ks[0], cfg)
+        del params["ln2"], specs["ln2"]
+        return params, specs
+    params["attn"], specs["attn"] = att.init_attn(ks[0], cfg)
+    if cross:
+        params["xattn"], specs["xattn"] = att.init_attn(ks[1], cfg, cross=True)
+        params["lnx"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        specs["lnx"] = P(None)
+    if kind == "moe":
+        params["ffn"], specs["ffn"] = moe_mod.init_moe(ks[2], cfg)
+    else:
+        params["ffn"], specs["ffn"] = mlp_mod.init_mlp(ks[2], cfg)
+    return params, specs
+
+
+def block_fwd(params, x, pos, cfg: ModelConfig, kind: str, mask_kind: str,
+              enc_out=None, enc_pos=None, prefix_len: int = 0):
+    aux = {}
+    if cfg.fsdp and x.shape[1] > 1:
+        # Megatron-style sequence parallelism: the residual stream (and hence
+        # the per-layer remat stash) is seq-sharded over the model axis;
+        # attention/MLP re-gather. 96-layer 340B stash: 14.5 GB -> 0.9 GB/dev.
+        x = constrain(x, P(AX_DATA, AX_MODEL, None))
+    if kind == "mamba":
+        h = rms_norm(x, params["ln1"], cfg.norm_eps)
+        y, _ = ssm_mod.mamba_forward(params["mix"], h, cfg)
+        return x + y, aux
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    x = x + att.attention(params["attn"], h, pos, cfg, mask_kind=mask_kind,
+                          prefix_len=prefix_len)
+    if enc_out is not None:
+        h = rms_norm(x, params["lnx"], cfg.norm_eps)
+        x = x + att.attention(params["xattn"], h, pos, cfg,
+                              mask_kind="bidir", kv_x=enc_out, kv_pos=enc_pos)
+    h = rms_norm(x, params["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        y, aux = moe_mod.moe_ffn(params["ffn"], h, cfg)
+    else:
+        y = mlp_mod.mlp(params["ffn"], h, cfg)
+    return x + y, aux
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+def init_embed(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    dt = cfg.jdtype
+    params = {"tok": dense_init(ks[0], (cfg.vocab, cfg.d_model), dt),
+              "ln_f": jnp.zeros((cfg.d_model,), jnp.float32)}
+    specs = {"tok": P(AX_MODEL, None), "ln_f": P(None)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks[1], (cfg.d_model, cfg.vocab), dt)
+        specs["unembed"] = fsdp_spec(P(None, AX_MODEL), cfg)
+    return params, specs
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    x = jnp.take(params["tok"], tokens, axis=0)
+    return constrain(x, P(AX_DATA, None, None))
+
+
+def vocab_padded(cfg: ModelConfig) -> int:
+    """Vocab rounded to a lane multiple so logits shard over the model axis
+    (exact-vocab logits for e.g. seamless's 256206 would be forced to
+    replicate: 31 GiB/device at prefill_32k). Params keep the exact vocab."""
+    return -(-cfg.vocab // 128) * 128
+
+
+def lm_head(params, x, cfg: ModelConfig):
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    V, Vp = cfg.vocab, vocab_padded(cfg)
+    if cfg.tie_embeddings:
+        w = params["tok"]
+        if Vp != V:
+            w = jnp.pad(w, ((0, Vp - V), (0, 0)))
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        w = params["unembed"]
+        if Vp != V:
+            w = jnp.pad(w, ((0, 0), (0, Vp - V)))
+        logits = jnp.einsum("bsd,dv->bsv", x, w)
+    if Vp != V:
+        pad = jnp.arange(Vp, dtype=jnp.int32) >= V
+        logits = jnp.where(pad[None, None, :], jnp.asarray(-1e30, x.dtype),
+                           logits)
+    return constrain(logits, P(AX_DATA, None, AX_MODEL))
+
+
+# ---------------------------------------------------------------------------
+# the Model
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---------------- init -------------------------------------------------
+    def init(self, rng) -> Tuple[Dict, Dict]:
+        cfg = self.cfg
+        keys = jax.random.split(rng, 8)
+        params, specs = {}, {}
+        params["embed"], specs["embed"] = init_embed(keys[0], cfg)
+
+        kind = self._block_kind()
+        cross = cfg.enc_layers > 0
+
+        def stack_init(key, n, kind, cross=False):
+            ks = jax.random.split(key, n)
+            ps, sp = [], None
+            for i in range(n):
+                p, sp = init_block(ks[i], cfg, kind, cross)
+                ps.append(p)
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+            sspec = jax.tree.map(lambda s: P(None, *s), sp,
+                                 is_leaf=lambda s: isinstance(s, P))
+            return stacked, sspec
+
+        params["layers"], specs["layers"] = stack_init(
+            keys[1], cfg.n_layers, kind, cross)
+        if cfg.family == "hybrid" and cfg.shared_every:
+            params["shared"], specs["shared"] = init_block(
+                keys[2], cfg, "attn")
+        if cfg.enc_layers:
+            params["enc"], specs["enc"] = stack_init(
+                keys[3], cfg.enc_layers, "attn")
+        if cfg.frontend == "vision":
+            # projection of (stub) patch embeddings into d_model
+            params["vproj"] = dense_init(keys[4], (cfg.d_model, cfg.d_model),
+                                         cfg.jdtype)
+            specs["vproj"] = P(None, None)
+        return params, specs
+
+    def _block_kind(self) -> str:
+        if self.cfg.family == "moe":
+            return "moe"
+        if self.cfg.family in ("ssm", "hybrid"):
+            return "mamba"
+        return "attn"
+
+    def _mask_kind(self) -> str:
+        return {"full": "causal", "swa": "swa", "chunked": "chunked"}[
+            self.cfg.attn]
+
+    # ---------------- stacks ----------------------------------------------
+    def _run_stack(self, layer_params, x, pos, kind, mask_kind,
+                   shared=None, enc_out=None, enc_pos=None, prefix_len=0):
+        cfg = self.cfg
+
+        def body(carry, lp_idx):
+            x = carry
+            lp, idx = lp_idx
+            x, aux = block_fwd(lp, x, pos, cfg, kind, mask_kind,
+                               enc_out=enc_out, enc_pos=enc_pos,
+                               prefix_len=prefix_len)
+            if shared is not None and cfg.shared_every:
+                def with_shared(x):
+                    y, _ = block_fwd(shared, x, pos, cfg, "attn", "swa")
+                    return y
+                x = jax.lax.cond(
+                    (idx % cfg.shared_every) == cfg.shared_every - 1,
+                    with_shared, lambda x: x, x)
+            lb = aux.get("lb_loss", jnp.float32(0.0))
+            return x, lb
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        n = jax.tree.leaves(layer_params)[0].shape[0]
+        x, lbs = jax.lax.scan(body_fn, x, (layer_params,
+                                           jnp.arange(n, dtype=jnp.int32)))
+        return x, jnp.sum(lbs)
+
+    # ---------------- forward (train / prefill) ---------------------------
+    def forward(self, params, batch, last_only: bool = False
+                ) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed_tokens(params["embed"], tokens, cfg)
+        prefix_len = 0
+        if cfg.frontend == "vision":
+            v = jnp.einsum("bfd,de->bfe", batch["frontend"].astype(cfg.jdtype),
+                           params["vproj"])
+            x = jnp.concatenate([v, x], axis=1)
+            prefix_len = cfg.frontend_len
+            S = x.shape[1]
+        pos = jnp.arange(S, dtype=jnp.int32)
+
+        enc_out = enc_pos = None
+        if cfg.enc_layers:
+            frames = batch["enc_frames"].astype(cfg.jdtype)
+            enc_pos = jnp.arange(frames.shape[1], dtype=jnp.int32)
+            enc_out, _ = self._run_stack(params["enc"], frames, enc_pos,
+                                         "attn", "bidir")
+
+        mask_kind = "prefix" if prefix_len else self._mask_kind()
+        x, lb = self._run_stack(
+            params["layers"], x, pos, self._block_kind(), mask_kind,
+            shared=params.get("shared"), enc_out=enc_out, enc_pos=enc_pos,
+            prefix_len=prefix_len)
+        if last_only:
+            # serving prefill needs only the next-token logits; computing the
+            # full (B, S, V) projection would dominate peak memory.
+            return lm_head(params["embed"], x[:, -1:], cfg), {"lb_loss": lb}
+        logits = lm_head(params["embed"], x, cfg)
+        if cfg.frontend == "vision":
+            logits = logits[:, cfg.frontend_len:]
+        return logits, {"lb_loss": lb}
+
+    # ---------------- decode ----------------------------------------------
+    def init_cache(self, batch_size: int, max_len: int,
+                   enc_len: int = 0) -> Tuple[Dict, Dict]:
+        cfg = self.cfg
+        cache: Dict[str, Any] = {"pos": jnp.int32(0)}
+        cspec: Dict[str, Any] = {"pos": P()}
+        big = max_len > 8192
+        if cfg.family in ("ssm", "hybrid"):
+            c = ssm_mod.init_ssm_cache(cfg, cfg.n_layers, batch_size)
+            s = ssm_mod.ssm_cache_specs(cfg)
+            cache.update(c)
+            cspec.update(s)
+            if cfg.family == "hybrid" and cfg.shared_every:
+                # one cache slice per shared-block INVOCATION: each call sees
+                # different layer activations, so caches must not be shared
+                n_inv = cfg.n_layers // cfg.shared_every
+                kv = att.init_kv_cache(cfg, n_inv, batch_size,
+                                       min(max_len, cfg.window))
+                ks = att.cache_specs(cfg, shard_seq=False)
+                cache["shared_kv"] = kv
+                cspec["shared_kv"] = ks
+        else:
+            kv = att.init_kv_cache(cfg, cfg.n_layers, batch_size, max_len)
+            cache.update(kv)
+            cspec.update(att.cache_specs(cfg, shard_seq=big))
+        if cfg.enc_layers:
+            # cross-attention K/V from the encoder, fixed during decode
+            KV, hd = cfg.n_kv_heads, cfg.hd
+            cache["xk"] = jnp.zeros((cfg.n_layers, batch_size, enc_len, KV,
+                                     hd), cfg.jdtype)
+            cache["xv"] = jnp.zeros_like(cache["xk"])
+            cspec["xk"] = P(None, AX_DATA, None, AX_MODEL, None)
+            cspec["xv"] = cspec["xk"]
+        return cache, cspec
+
+    def prefill_encoder(self, params, cache, batch):
+        """Enc-dec: run encoder, fill cross-attention K/V cache."""
+        cfg = self.cfg
+        frames = batch["enc_frames"].astype(cfg.jdtype)
+        enc_pos = jnp.arange(frames.shape[1], dtype=jnp.int32)
+        enc_out, _ = self._run_stack(params["enc"], frames, enc_pos, "attn",
+                                     "bidir")
+
+        def per_layer(carry, lp):
+            k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wv"])
+            return carry, (k, v)
+
+        _, (xk, xv) = jax.lax.scan(per_layer, None, params["layers"])
+        cache = dict(cache, xk=xk, xv=xv)
+        return cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: (B, 1); pos: int32 scalar (same position across batch)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = embed_tokens(params["embed"], tokens, cfg)
+        kind = self._block_kind()
+
+        if kind == "mamba":
+            def body(carry, lp_cache):
+                x, shared_kv, layer_i = carry
+                lp, h, conv = lp_cache
+                hnorm = rms_norm(x, lp["ln1"], cfg.norm_eps)
+                y, h, conv = ssm_mod.mamba_decode_step(
+                    lp["mix"], hnorm, h, conv, cfg)
+                x = x + y
+                if cfg.family == "hybrid" and cfg.shared_every:
+                    inv = layer_i // cfg.shared_every
+
+                    def with_shared(args):
+                        x, kv = args
+                        return self._shared_decode(params["shared"], x, kv,
+                                                   pos, inv)
+                    x, shared_kv = jax.lax.cond(
+                        (layer_i % cfg.shared_every) == cfg.shared_every - 1,
+                        with_shared, lambda a: a, (x, shared_kv))
+                return (x, shared_kv, layer_i + 1), (h, conv)
+
+            shared_kv = cache.get("shared_kv")
+            (x, shared_kv, _), (hs, convs) = jax.lax.scan(
+                body, (x, shared_kv, jnp.int32(0)),
+                (params["layers"], cache["h"], cache["conv"]))
+            cache = dict(cache, h=hs, conv=convs, pos=pos + 1)
+            if shared_kv is not None:
+                cache["shared_kv"] = shared_kv
+        else:
+            quant = cfg.opt_kv_quant
+
+            def body(x, lp_cache):
+                lp_cache = list(lp_cache)
+                lp, ck, cv, cidx_l = lp_cache[:4]
+                rest = lp_cache[4:]
+                ksc = vsc = None
+                if quant:
+                    ksc, vsc = rest[0], rest[1]
+                    rest = rest[2:]
+                h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+                if quant:
+                    ck, cv, cidx_l, ksc, vsc = att.update_cache(
+                        lp["attn"], h, ck, cv, cidx_l, pos, cfg, ksc, vsc)
+                else:
+                    ck, cv, cidx_l = att.update_cache(lp["attn"], h, ck, cv,
+                                                      cidx_l, pos, cfg)
+                x = x + att.decode_attention(lp["attn"], h, ck, cv, cidx_l,
+                                             pos, cfg, k_scale=ksc,
+                                             v_scale=vsc)
+                if cfg.enc_layers:
+                    xk, xv = rest
+                    h = rms_norm(x, lp["lnx"], cfg.norm_eps)
+                    x = x + self._cross_decode(lp["xattn"], h, xk, xv)
+                h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+                if kind == "moe":
+                    y, _ = moe_mod.moe_ffn(lp["ffn"], h, cfg)
+                else:
+                    y = mlp_mod.mlp(lp["ffn"], h, cfg)
+                out = (ck, cv, cidx_l) + ((ksc, vsc) if quant else ())
+                return x + y, out
+
+            # per-layer cache index: same idx array per layer, stacked
+            cidx = jnp.broadcast_to(cache["idx"],
+                                    (cfg.n_layers,) + cache["idx"].shape)
+            xs = (params["layers"], cache["k"], cache["v"], cidx)
+            if quant:
+                xs = xs + (cache["k_scale"], cache["v_scale"])
+            if cfg.enc_layers:
+                xs = xs + (cache["xk"], cache["xv"])
+            x, outs = jax.lax.scan(body, x, xs)
+            cache = dict(cache, k=outs[0], v=outs[1], idx=outs[2][0],
+                         pos=pos + 1)
+            if quant:
+                cache["k_scale"], cache["v_scale"] = outs[3], outs[4]
+
+        logits = lm_head(params["embed"], x, cfg)
+        return logits, cache
+
+    def _cross_decode(self, p, x, xk, xv):
+        cfg = self.cfg
+        B = x.shape[0]
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        H, hd = cfg.n_heads, cfg.hd
+        KV = xk.shape[2]
+        G = H // KV
+        qg = q.reshape(B, KV, G, hd)
+        s = jnp.einsum("bkgh,btkh->bkgt", qg, xk).astype(jnp.float32)
+        s *= hd ** -0.5
+        pr = jax.nn.softmax(s, -1).astype(x.dtype)
+        out = jnp.einsum("bkgt,btkh->bkgh", pr, xv).reshape(B, 1, H, hd)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+    def _shared_decode(self, p, x, kv, pos, inv):
+        cfg = self.cfg
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        ck = jax.lax.dynamic_index_in_dim(kv["k"], inv, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(kv["v"], inv, keepdims=False)
+        cidx = kv["idx"]                       # positions shared across invs
+        ck, cv, cidx = att.update_cache(p["attn"], h, ck, cv, cidx, pos, cfg)
+        x = x + att.decode_attention(p["attn"], h, ck, cv, cidx, pos, cfg)
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp_mod.mlp(p["ffn"], h, cfg)
+        kv = dict(kv,
+                  k=jax.lax.dynamic_update_index_in_dim(kv["k"], ck, inv, 0),
+                  v=jax.lax.dynamic_update_index_in_dim(kv["v"], cv, inv, 0),
+                  idx=cidx)
+        return x, kv
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,3 @@
+from .matching_router import route_matching, route_topk, router_stats
+
+__all__ = ["route_matching", "route_topk", "router_stats"]

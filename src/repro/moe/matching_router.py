@@ -1,0 +1,221 @@
+"""Token -> expert assignment as maximum-cardinality bipartite b-matching.
+
+This is the paper's algorithm applied to MoE routing (the framework
+integration).  Token/expert assignment under expert capacity is a bipartite
+b-matching problem: tokens have demand ``k`` (top-k routing), experts have
+capacity ``C``, edges are each token's top-m candidate experts.  The greedy
+capacity-truncation router (``route_topk``, the GShard/Switch standard) drops
+every (token, choice) that lands on a full expert; maximum-cardinality
+matching minimizes drops over the candidate graph.
+
+The matcher here is the paper's APFB machinery specialized to the capacitated
+case, with the same three phases per iteration:
+
+* level-synchronous BFS from demand-deficient tokens through
+  (token -> candidate expert -> tokens assigned to that expert -> ...) until
+  experts with slack are found (the paper's GPUBFS, with experts playing the
+  role of columns and "unmatched row" = expert with residual capacity);
+* speculative parallel alternation of the discovered augmenting paths
+  (ALTERNATE): every slack expert walks its predecessor chain in lock-step,
+  swapping assignments; conflicting walkers are tolerated;
+* a repair pass (FIXMATCHING): duplicate experts within a token are cleared
+  and per-expert overflow is evicted by slot rank, restoring feasibility.
+
+Everything is fixed-shape and jit-compatible, so the router runs inside the
+training step.  ``aug_phases`` bounds the augmentation work (2 is enough to
+recover most drops; benchmarks/table_router.py sweeps it).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+IINF = jnp.int32(2**30)
+
+
+def _slot_and_evict(assign, n_experts: int, capacity: int):
+    """Final feasibility pass: slot = rank of instance within its expert
+    (token-major priority, as in GShard); instances with slot >= C dropped."""
+    T, k = assign.shape
+    flat = assign.reshape(T * k)
+    onehot = jax.nn.one_hot(flat, n_experts, dtype=jnp.int32)   # (I, E)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot                 # exclusive
+    slot = jnp.take_along_axis(
+        ranks, jnp.clip(flat, 0, n_experts - 1)[:, None], axis=1)[:, 0]
+    keep = (flat >= 0) & (slot < capacity)
+    flat = jnp.where(keep, flat, -1)
+    slot = jnp.where(keep, slot, 0)
+    return flat.reshape(T, k), slot.reshape(T, k)
+
+
+def _dedupe(assign):
+    """Clear duplicate experts within a token (keep first occurrence)."""
+    T, k = assign.shape
+    dup = jnp.zeros((T, k), bool)
+    for j in range(1, k):
+        same = (assign[:, j:j + 1] == assign[:, :j]) & (assign[:, j:j + 1] >= 0)
+        dup = dup.at[:, j].set(same.any(axis=1))
+    return jnp.where(dup, -1, assign)
+
+
+def _loads(assign, n_experts: int):
+    flat = assign.reshape(-1)
+    seg = jnp.where(flat >= 0, flat, n_experts)
+    return jnp.zeros(n_experts + 1, jnp.int32).at[seg].add(1)[:n_experts]
+
+
+def route_topk(logits, k: int, capacity: int):
+    """Greedy baseline: per-choice-round capacity truncation (GShard-style)."""
+    T, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    _, cand = jax.lax.top_k(logits, k)                          # (T, k)
+    assign, slot = _slot_and_evict(cand, E, capacity)
+    p = jnp.take_along_axis(probs, jnp.clip(cand, 0, E - 1), axis=1)
+    p = jnp.where(assign >= 0, p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-9)
+    return assign, slot, p
+
+
+def route_matching(logits, k: int, capacity: int, *, n_cand: int = 0,
+                   aug_phases: int = 2, max_path: int = 8):
+    """Capacitated maximum-cardinality matching router (the paper's technique).
+
+    Returns (assign (T,k), slot (T,k), combine_probs (T,k)).
+    """
+    T, E = logits.shape
+    m = n_cand or min(E, k + 2)                                 # candidate fan-out
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    _, cand = jax.lax.top_k(logits, m)                          # (T, m)
+
+    # ---- phase 0: cascade greedy (the "cheap matching" warm start) --------
+    # choice round j: every token with an unmet demand slot proposes its best
+    # not-yet-used candidate; experts accept up to remaining capacity.
+    assign = jnp.full((T, k), jnp.int32(-1))
+    used = jnp.zeros((T, m), bool)                              # candidate consumed
+    load = jnp.zeros(E, jnp.int32)
+    for j in range(k + 2):                                      # k + retry rounds
+        deficit = (assign >= 0).sum(-1) < k
+        # best unused candidate with residual capacity
+        cap_ok = (load[jnp.clip(cand, 0, E - 1)] < capacity) & ~used
+        choice = jnp.argmax(cap_ok, axis=1)                     # first viable
+        viable = jnp.take_along_axis(cap_ok, choice[:, None], 1)[:, 0] & deficit
+        e_prop = jnp.where(
+            viable, jnp.take_along_axis(cand, choice[:, None], 1)[:, 0], E)
+        # experts accept by token-major rank within remaining capacity
+        onehot = jax.nn.one_hot(e_prop, E + 1, dtype=jnp.int32)[:, :E]
+        rank = jnp.cumsum(onehot, axis=0) - onehot
+        myrank = jnp.take_along_axis(
+            rank, jnp.clip(e_prop, 0, E - 1)[:, None], 1)[:, 0]
+        accept = viable & (load[jnp.clip(e_prop, 0, E - 1)] + myrank < capacity)
+        # commit: first free demand slot
+        free_slot = jnp.argmax(assign < 0, axis=1)
+        assign = jnp.where(
+            accept[:, None]
+            & (jnp.arange(k)[None, :] == free_slot[:, None]),
+            e_prop[:, None], assign)
+        used = used | (accept[:, None] & (jnp.arange(m)[None] == choice[:, None]))
+        # a proposed-but-rejected candidate is NOT consumed (expert may free up
+        # during augmentation) — but to guarantee round progress we consume it
+        # after the k-th round:
+        if j >= k:
+            used = used | (viable[:, None] & (jnp.arange(m)[None] == choice[:, None]))
+        load = _loads(assign, E)
+
+    # ---- augmentation phases (APFB adapted; BFS + speculative alternate) ---
+    for _ in range(aug_phases):
+        load = _loads(assign, E)
+        deficit = (assign >= 0).sum(-1) < k
+        has_unused = (~used & (cand < E)).any(-1)
+        start_t = deficit & has_unused
+        # BFS over (token, expert) alternating structure
+        t_level = jnp.where(start_t, 0, IINF)                   # (T,)
+        e_level = jnp.full(E, IINF)
+        pred_e = jnp.full(E, IINF)                              # token that enters e
+        pred_t = jnp.full(T, IINF)                              # expert t releases
+        endpoint = jnp.full(E, False)
+        level = 0
+        for level in range(0, max_path, 2):
+            frontier_t = t_level == level
+            # frontier tokens propose all unused candidates
+            prop_src = jnp.where(frontier_t[:, None] & ~used, cand, E)
+            tok_ids = jnp.broadcast_to(
+                jnp.arange(T, dtype=jnp.int32)[:, None], (T, m))
+            new_e = jnp.full(E + 1, IINF).at[prop_src.reshape(-1)].min(
+                tok_ids.reshape(-1))[:E]
+            fresh_e = (new_e < IINF) & (e_level == IINF)
+            pred_e = jnp.where(fresh_e, new_e, pred_e)
+            e_level = jnp.where(fresh_e, level + 1, e_level)
+            endpoint = endpoint | (fresh_e & (load < capacity))
+            # tokens assigned to freshly visited (full) experts join frontier
+            assigned_fresh = (fresh_e & (load >= capacity))[
+                jnp.clip(assign, 0, E - 1)] & (assign >= 0)     # (T, k)
+            t_new = assigned_fresh.any(-1) & (t_level == IINF)
+            which = jnp.argmax(assigned_fresh, axis=1)
+            rel = jnp.take_along_axis(assign, which[:, None], 1)[:, 0]
+            pred_t = jnp.where(t_new, rel, pred_t)
+            t_level = jnp.where(t_new, level + 2, t_level)
+        # ---- speculative parallel alternation from slack endpoints --------
+        e_ids = jnp.arange(E, dtype=jnp.int32)
+        cur_e = jnp.where(endpoint, e_ids, -1)                  # walker per expert
+        gain_e = jnp.where(endpoint, e_ids, -1)                 # expert to add
+        for _ in range(max_path // 2 + 1):
+            active = cur_e >= 0
+            t = jnp.where(active, pred_e[jnp.clip(cur_e, 0, E - 1)], IINF)
+            t = t.astype(jnp.int32)
+            valid = active & (t < T)
+            tc = jnp.clip(t, 0, T - 1)
+            release = pred_t[tc].astype(jnp.int32)              # expert released
+            is_root = t_level[tc] == 0
+            # swap: in token t, replace `release` by `gain_e` (root: fill a
+            # free slot instead). Conflicts (two walkers, same token) resolve
+            # by later-writer; repair pass restores feasibility.
+            gain = jnp.where(valid, gain_e, -1)
+            upd_root = valid & is_root
+            upd_swap = valid & ~is_root & (release < E)
+            # scatter per token: one walker wins (min expert id)
+            tok_gain = jnp.full(T + 1, IINF).at[
+                jnp.where(valid, tc, T)].min(jnp.where(valid, gain, IINF))[:T]
+            tok_rel = jnp.full(T + 1, IINF).at[
+                jnp.where(upd_swap, tc, T)].min(
+                    jnp.where(upd_swap, release, IINF))[:T]
+            win = tok_gain < IINF
+            # apply swap / fill
+            def apply_tok(assign):
+                rel_match = assign == tok_rel[:, None]
+                first_rel = (jnp.cumsum(rel_match, 1) == 1) & rel_match
+                swapped = jnp.where(
+                    win[:, None] & (tok_rel < IINF)[:, None] & first_rel,
+                    tok_gain[:, None].astype(jnp.int32), assign)
+                free = swapped < 0
+                first_free = (jnp.cumsum(free, 1) == 1) & free
+                filled = jnp.where(
+                    win[:, None] & (tok_rel == IINF)[:, None] & first_free,
+                    tok_gain[:, None].astype(jnp.int32), swapped)
+                return filled
+            assign = apply_tok(assign)
+            # continue walk: released expert becomes the next gain
+            nxt = jnp.where(upd_swap, release, -1)
+            cur_e = jnp.where(valid & ~is_root, nxt, -1)
+            gain_e = cur_e
+        assign = _dedupe(assign)
+
+    assign, slot = _slot_and_evict(assign, E, capacity)
+    p = jnp.take_along_axis(probs, jnp.clip(assign, 0, E - 1), axis=1)
+    p = jnp.where(assign >= 0, p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-9)
+    return assign, slot, p
+
+
+def router_stats(assign, k: int) -> dict:
+    """Drop-rate diagnostics (used by benchmarks and tests)."""
+    T = assign.shape[0]
+    assigned = (assign >= 0).sum()
+    return {
+        "assigned": assigned,
+        "demand": T * k,
+        "drop_rate": 1.0 - assigned / (T * k),
+    }

@@ -1,0 +1,5 @@
+from .adamw import adamw_init, adamw_update, OptConfig
+from .compress import compress_grads, decompress_grads
+
+__all__ = ["adamw_init", "adamw_update", "OptConfig", "compress_grads",
+           "decompress_grads"]

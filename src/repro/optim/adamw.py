@@ -1,0 +1,187 @@
+"""AdamW with fp32 master state, global-norm clipping and ZeRO-1 sharding.
+
+Optimizer state (m, v, master fp32 copy) is sharded over BOTH mesh axes
+(ZeRO-1): each param's spec gets its first unsharded axis assigned to the
+data axis when divisible.  With bf16 params this keeps nemotron-340b's
+optimizer at ~16 GB/chip on the 16x16 mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import AX_DATA
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 100
+    master_fp32: bool = True
+    factored: bool = False      # Adafactor-style row/col second moment +
+                                # bf16 first moment: ~1/6 the optimizer bytes,
+                                # required to fit the >=100B archs on v5e-256.
+
+
+def _flat_axes(parts):
+    out = set()
+    for p in parts:
+        if p is None:
+            continue
+        out.update((p,) if isinstance(p, str) else p)
+    return out
+
+
+def _zero1_spec(spec: P, shape) -> P:
+    """Shard the first unsharded, divisible axis over data (ZeRO-1)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    if AX_DATA in _flat_axes(parts):
+        return P(*parts)                 # FSDP already uses the data axis
+    for i, (p, s) in enumerate(zip(parts, shape)):
+        if p is None and s % 2 == 0:     # divisibility resolved at sanitize
+            parts[i] = AX_DATA
+            return P(*parts)
+    return P(*parts)
+
+
+def _factorable(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adamw_init(params, specs, cfg: OptConfig):
+    if cfg.factored:
+        def mk_m(p):
+            return jnp.zeros(p.shape, jnp.bfloat16)
+
+        def mk_vr(p):   # row second moment (last dim reduced)
+            if _factorable(p.shape):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def mk_vc(p):   # col second moment (second-to-last reduced)
+            if _factorable(p.shape):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        def sp_reduce(s, p, drop_last: bool):
+            parts = list(s) + [None] * (len(p.shape) - len(s))
+            if not _factorable(p.shape):
+                return P(*parts) if drop_last else P(None)
+            if drop_last:
+                return P(*parts[:-1])
+            return P(*(parts[:-2] + parts[-1:]))
+
+        state = {
+            "m": jax.tree.map(mk_m, params),
+            "vr": jax.tree.map(mk_vr, params),
+            "vc": jax.tree.map(mk_vc, params),
+            "step": jnp.int32(0),
+        }
+        sspecs = {
+            "m": jax.tree.map(lambda s, p: _zero1_spec(s, p.shape), specs,
+                              params, is_leaf=lambda s: isinstance(s, P)),
+            "vr": jax.tree.map(lambda s, p: sp_reduce(s, p, True), specs,
+                               params, is_leaf=lambda s: isinstance(s, P)),
+            "vc": jax.tree.map(lambda s, p: sp_reduce(s, p, False), specs,
+                               params, is_leaf=lambda s: isinstance(s, P)),
+            "step": P(),
+        }
+        return state, sspecs
+
+    def mk(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
+    state = {
+        "m": jax.tree.map(mk, params),
+        "v": jax.tree.map(mk, params),
+        "step": jnp.int32(0),
+    }
+    sspecs = {
+        "m": jax.tree.map(lambda s, p: _zero1_spec(s, p.shape), specs, params,
+                          is_leaf=lambda s: isinstance(s, P)),
+        "v": jax.tree.map(lambda s, p: _zero1_spec(s, p.shape), specs, params,
+                          is_leaf=lambda s: isinstance(s, P)),
+        "step": P(),
+    }
+    if cfg.master_fp32:
+        # jnp.array(copy=True): astype(f32) on f32 params would alias the
+        # param buffer and break donation (same buffer donated twice)
+        state["master"] = jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+        sspecs["master"] = sspecs["m"]
+    return state, sspecs
+
+
+def _schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup))
+    return cfg.lr * warm
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = _schedule(cfg, state["step"])
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    if cfg.factored:
+        def updf(p, g, m, vr, vc):
+            g = g.astype(jnp.float32) * scale
+            m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+            g2 = jnp.square(g) + 1e-30
+            if _factorable(p.shape):
+                vr = cfg.b2 * vr + (1 - cfg.b2) * g2.mean(-1)
+                vc = cfg.b2 * vc + (1 - cfg.b2) * g2.mean(-2)
+                vhat = (vr[..., None] * vc[..., None, :]
+                        / jnp.maximum(vr.mean(-1)[..., None, None], 1e-30))
+            else:
+                vr = cfg.b2 * vr + (1 - cfg.b2) * g2
+                vhat = vr
+            u = (m32 / b1c) / (jnp.sqrt(vhat / b2c) + cfg.eps)
+            w32 = p.astype(jnp.float32)
+            w32 = w32 - lr * (u + cfg.weight_decay * w32)
+            return w32.astype(p.dtype), m32.astype(jnp.bfloat16), vr, vc
+
+        out = jax.tree.map(updf, params, grads, state["m"], state["vr"],
+                           state["vc"])
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+        return pick(0), {"m": pick(1), "vr": pick(2), "vc": pick(3),
+                         "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+    masters = state.get("master", params)
+
+    def upd(p, g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        u = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        w32 = w.astype(jnp.float32)
+        w32 = w32 - lr * (u + cfg.weight_decay * w32)
+        return w32.astype(p.dtype), m, v, w32
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"], masters)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {
+        "m": jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple)),
+        "v": jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple)),
+        "step": step,
+    }
+    if "master" in state:
+        new_state["master"] = jax.tree.map(
+            lambda t: t[3], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see ONE device; only launch/dryrun.py sets the
+# 512-device flag (and only when run as its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,77 @@
+"""The loop-aware HLO cost model must match analytic FLOPs on known programs
+(this is the correction on top of xla's HloCostAnalysis, which counts while
+bodies once — see launch/hlo_cost.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    a = jnp.zeros((128, 256))
+    b = jnp.zeros((256, 512))
+    got = analyze(_hlo(lambda a, b: a @ b, a, b))
+    expect = 2 * 128 * 256 * 512
+    assert abs(got["flops"] - expect) / expect < 0.01
+    assert got["unknown_while"] == 0
+
+
+def test_scan_multiplies_by_trip_count():
+    w = jnp.zeros((8, 64, 64))     # 8 scanned layers
+
+    def fn(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    x = jnp.zeros((32, 64))
+    got = analyze(_hlo(fn, x, w))
+    expect = 8 * 2 * 32 * 64 * 64
+    assert abs(got["flops"] - expect) / expect < 0.05, got["flops"] / expect
+
+
+def test_nested_scan():
+    w = jnp.zeros((4, 3, 32, 32))
+
+    def fn(x, w):
+        def outer(c, wg):
+            def inner(c2, wi):
+                return c2 @ wi, None
+            c, _ = jax.lax.scan(inner, c, wg)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, w)
+        return y
+
+    x = jnp.zeros((16, 32))
+    got = analyze(_hlo(fn, x, w))
+    expect = 12 * 2 * 16 * 32 * 32
+    assert abs(got["flops"] - expect) / expect < 0.05, got["flops"] / expect
+
+
+def test_batched_dot_flops():
+    a = jnp.zeros((4, 64, 96))
+    b = jnp.zeros((4, 96, 32))
+    got = analyze(_hlo(lambda a, b: jnp.einsum("bij,bjk->bik", a, b), a, b))
+    expect = 2 * 4 * 64 * 96 * 32
+    assert abs(got["flops"] - expect) / expect < 0.01
+
+
+def test_bytes_scale_with_scan():
+    w = jnp.zeros((16, 128, 128))
+
+    def fn(x, w):
+        def body(c, wi):
+            return c @ wi, None
+        return jax.lax.scan(body, x, w)[0]
+
+    x = jnp.zeros((4, 128))
+    got = analyze(_hlo(fn, x, w))
+    # each iteration must read at least one (128,128) f32 weight slice
+    assert got["bytes"] >= 16 * 128 * 128 * 4

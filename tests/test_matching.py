@@ -1,0 +1,159 @@
+"""Correctness of the paper's matcher variants: unit + hypothesis property."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BipartiteCSR, MatcherConfig, VARIANTS,
+                        cheap_matching, cheap_matching_jax, hopcroft_karp,
+                        maximum_cardinality, maximum_matching, pfp,
+                        validate_matching)
+from repro.graphs import grid_graph, kron_graph, random_bipartite, scaled_free
+
+CONFIGS = [
+    MatcherConfig(algo="apfb", kernel="gpubfs"),
+    MatcherConfig(algo="apfb", kernel="gpubfs_wr"),
+    MatcherConfig(algo="apsb", kernel="gpubfs"),
+    MatcherConfig(algo="apsb", kernel="gpubfs_wr", wr_exact=True),
+]
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=lambda c: c.name)
+@pytest.mark.parametrize("gname,g", [
+    ("rand", random_bipartite(300, 300, 3.0, seed=1)),
+    ("rand_rect", random_bipartite(200, 350, 4.0, seed=2)),
+    ("grid", grid_graph(14)),
+    ("kron", kron_graph(8, 6, seed=3)),
+    ("free", scaled_free(250, 250, 5.0, seed=4)),
+    ("perm", random_bipartite(300, 300, 3.0, seed=5).permuted(1)),
+])
+def test_matcher_reaches_maximum(cfg, gname, g):
+    opt = maximum_cardinality(g)
+    cm0, rm0 = cheap_matching_jax(g)
+    cm, rm, stats = maximum_matching(g, cfg, cm0, rm0)
+    card = validate_matching(g, cm, rm)
+    assert card == opt, (gname, cfg.name, stats)
+
+
+def test_oracles_agree():
+    for seed in range(5):
+        g = random_bipartite(150, 150, 2.5, seed=seed)
+        opt = maximum_cardinality(g)
+        cm, rm = hopcroft_karp(g)
+        assert validate_matching(g, cm, rm) == opt
+        cm, rm = pfp(g)
+        assert validate_matching(g, cm, rm) == opt
+
+
+def test_cheap_matching_valid():
+    g = random_bipartite(200, 200, 3.0, seed=7)
+    c1 = validate_matching(g, *cheap_matching(g))
+    c2 = validate_matching(g, *cheap_matching_jax(g))
+    opt = maximum_cardinality(g)
+    # greedy guarantees >= 1/2 of optimal (maximal matching property)
+    assert c1 * 2 >= opt and c2 * 2 >= opt
+
+
+def test_cold_start_no_warm_init():
+    g = random_bipartite(120, 120, 3.0, seed=9)
+    cm, rm, _ = maximum_matching(g, MatcherConfig())
+    assert validate_matching(g, cm, rm) == maximum_cardinality(g)
+
+
+def test_all_eight_variants_run():
+    g = random_bipartite(100, 100, 3.0, seed=11)
+    opt = maximum_cardinality(g)
+    for cfg in VARIANTS:
+        cm, rm, _ = maximum_matching(g, cfg)
+        assert validate_matching(g, cm, rm) == opt, cfg.name
+
+
+@st.composite
+def bip_graphs(draw):
+    nc = draw(st.integers(1, 60))
+    nr = draw(st.integers(1, 60))
+    nnz = draw(st.integers(1, 240))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    cols = rng.integers(0, nc, size=nnz)
+    rows = rng.integers(0, nr, size=nnz)
+    return BipartiteCSR.from_edges(cols, rows, nc, nr)
+
+
+@settings(max_examples=40, deadline=None)
+@given(g=bip_graphs(),
+       variant=st.sampled_from(range(len(CONFIGS))))
+def test_property_maximum_and_valid(g, variant):
+    """Any random bipartite graph: result is a VALID matching of MAXIMUM
+    cardinality (cardinality is unique even though matchings are not)."""
+    cfg = CONFIGS[variant]
+    opt = maximum_cardinality(g)
+    cm, rm, stats = maximum_matching(g, cfg)
+    card = validate_matching(g, cm, rm)
+    assert card == opt, stats
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=bip_graphs(), seed=st.integers(0, 100))
+def test_property_permutation_invariant_cardinality(g, seed):
+    """RCP transform (the paper's second instance set) preserves |M*|."""
+    gp = g.permuted(seed)
+    assert maximum_cardinality(g) == maximum_cardinality(gp)
+    cm, rm, _ = maximum_matching(gp, MatcherConfig())
+    assert validate_matching(gp, cm, rm) == maximum_cardinality(g)
+
+
+@settings(max_examples=20, deadline=None)
+@given(g=bip_graphs())
+def test_property_warm_start_consistent(g):
+    """Warm-starting from greedy reaches the same cardinality as cold."""
+    cm0, rm0 = cheap_matching_jax(g)
+    c_warm, r_warm, _ = maximum_matching(g, MatcherConfig(), cm0, rm0)
+    assert validate_matching(g, c_warm, r_warm) == maximum_cardinality(g)
+
+
+@settings(max_examples=25, deadline=None)
+@given(g=bip_graphs(), tail=st.integers(1, 6))
+def test_property_bounded_tail_reaches_maximum(g, tail):
+    """Beyond-paper bounded-tail APFB must still terminate at maximum
+    cardinality (the phase-gain guard preserves the invariant)."""
+    cfg = MatcherConfig(algo="apfb", kernel="gpubfs_wr", tail_levels=tail)
+    opt = maximum_cardinality(g)
+    cm, rm, stats = maximum_matching(g, cfg)
+    assert validate_matching(g, cm, rm) == opt, stats
+
+
+def test_push_relabel_oracle():
+    """The paper's second algorithm class reaches maximum cardinality."""
+    from repro.core import push_relabel
+    for seed in range(4):
+        g = random_bipartite(200, 200, 3.0, seed=seed)
+        cm, rm = push_relabel(g)
+        assert validate_matching(g, cm, rm) == maximum_cardinality(g)
+    g = grid_graph(12)
+    cm, rm = push_relabel(g)
+    assert validate_matching(g, cm, rm) == maximum_cardinality(g)
+
+
+def test_karp_sipser_init():
+    """KS init is a valid matching and (weakly) beats cheap on the suite."""
+    from repro.core import karp_sipser_jax
+    from repro.graphs import banded, instance_sets
+    total_ks = total_cheap = 0
+    for name, g in instance_sets("tiny").items():
+        cm, rm = karp_sipser_jax(g)
+        card = validate_matching(g, cm, rm)
+        cheap = validate_matching(g, *cheap_matching_jax(g))
+        total_ks += card
+        total_cheap += cheap
+        assert card * 2 >= maximum_cardinality(g)        # maximal >= opt/2
+    assert total_ks >= total_cheap, (total_ks, total_cheap)
+
+
+@settings(max_examples=20, deadline=None)
+@given(g=bip_graphs())
+def test_property_ks_valid_and_matcher_from_ks(g):
+    from repro.core import karp_sipser_jax
+    cm0, rm0 = karp_sipser_jax(g)
+    validate_matching(g, cm0, rm0)
+    cm, rm, _ = maximum_matching(g, MatcherConfig(), cm0, rm0)
+    assert validate_matching(g, cm, rm) == maximum_cardinality(g)
