@@ -12,8 +12,7 @@ from __future__ import annotations
 import sys
 from typing import List
 
-from repro.core import MatcherConfig, cheap_matching_jax, maximum_matching
-from repro.core.csr import BipartiteCSR
+from repro.core import MatcherConfig
 from .common import geomean, prepared_instances, time_matcher
 
 

@@ -9,8 +9,9 @@ import argparse
 import sys
 import time
 
-from . import (fig2_bfs_iters, fig35_speedups, perf_matcher, roofline,
-               table1_variants, table2_hardest, table_init, table_router)
+from . import (batch_matching, fig2_bfs_iters, fig35_speedups, perf_matcher,
+               roofline, table1_variants, table2_hardest, table_init,
+               table_router)
 
 BENCHES = {
     "table1": table1_variants.run,     # paper Table 1
@@ -21,6 +22,7 @@ BENCHES = {
     "init": table_init.run,            # KS vs cheap init (beyond-paper)
     "perf_matcher": perf_matcher.run,  # EXPERIMENTS §Perf (matcher hillclimb)
     "roofline": roofline.run,          # EXPERIMENTS §Roofline (from dry-run)
+    "batch": batch_matching.run,       # match_many serving throughput
 }
 
 

@@ -1,14 +1,23 @@
-"""Core: the paper's maximum-cardinality bipartite matching algorithms."""
+"""Core: the paper's maximum-cardinality bipartite matching algorithms.
+
+Host-centric compat surface (numpy in/out).  The device-resident API —
+``DeviceCSR`` pytree graphs, the composable ``Matcher`` facade, batched
+``match_many`` — lives in :mod:`repro.matching` and is re-exported here for
+convenience.
+"""
 from .csr import BipartiteCSR, validate_matching, UNMATCHED, ENDPOINT
 from .matcher import MatcherConfig, VARIANTS, maximum_matching
 from .cheap import cheap_matching_jax
 from .karp_sipser import karp_sipser_jax
 from .oracles import (cheap_matching, hopcroft_karp, pfp,
                       maximum_cardinality, push_relabel)
+from repro.matching import (DeviceCSR, Matcher, MatchState, MatchStats,
+                            match_many)
 
 __all__ = [
     "BipartiteCSR", "validate_matching", "UNMATCHED", "ENDPOINT",
     "MatcherConfig", "VARIANTS", "maximum_matching", "cheap_matching_jax",
     "cheap_matching", "hopcroft_karp", "pfp", "maximum_cardinality",
     "push_relabel", "karp_sipser_jax",
+    "DeviceCSR", "Matcher", "MatchState", "MatchStats", "match_many",
 ]

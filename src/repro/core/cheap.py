@@ -1,68 +1,27 @@
-"""Parallel cheap-matching initialization (the paper's common warm start).
+"""Numpy-compat wrapper for the parallel cheap-matching warm start.
 
-The paper initializes every algorithm with the sequential "cheap matching"
-greedy heuristic [8].  The TPU adaptation is a speculative round-based greedy
-(propose -> resolve -> commit), the same speculate-then-repair pattern as the
-main matcher: each round, every unmatched column proposes its lowest-index
-unmatched neighbor row; each proposed row accepts its lowest proposing
-column; accepted pairs commit.  Rounds repeat until no proposal survives,
-which yields a maximal greedy matching (quality comparable to sequential
-cheap matching; benchmarked in bench_matching).
+The pure initializer lives in :mod:`repro.matching.warmstart` (registry name
+``"cheap"``) so :class:`repro.matching.Matcher` can fuse it with the solver in
+one compiled program.  This wrapper keeps the original numpy in/out entry
+point for the sequential baselines and benchmarks.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+
+from repro.matching.api import Matcher
+from repro.matching.device_csr import DeviceCSR
+from repro.matching.warmstart import cheap_init                      # noqa: F401
 
 from .csr import BipartiteCSR
 
-IINF = jnp.int32(2**30)
 
-
-def _build(nc: int, nr: int):
-    def round_fn(carry):
-        ecol, cadj, cmatch, rmatch, _ = carry
-        col_free = cmatch[ecol] == -1
-        row_free = rmatch[cadj] == -1
-        cand = jnp.where(col_free & row_free, cadj, IINF)
-        best_r = jnp.full(nc + 1, IINF, jnp.int32).at[ecol].min(cand)
-        best_r = best_r.at[nc].set(IINF)
-        cols = jnp.arange(nc + 1, dtype=jnp.int32)
-        propose = best_r < IINF
-        best_c = jnp.full(nr + 1, IINF, jnp.int32).at[
-            jnp.where(propose, best_r, nr)].min(jnp.where(propose, cols, IINF))
-        best_c = best_c.at[nr].set(IINF)
-        won = best_c < IINF                                  # per-row accept
-        rows = jnp.arange(nr + 1, dtype=jnp.int32)
-        rmatch = jnp.where(won, best_c, rmatch)
-        cmatch = cmatch.at[jnp.where(won, best_c, nc)].set(
-            jnp.where(won, rows, cmatch[nc]))
-        cmatch = cmatch.at[nc].set(jnp.int32(-3))
-        return ecol, cadj, cmatch, rmatch, jnp.any(won)
-
-    def cond(carry):
-        return carry[-1]
-
-    def fn(ecol, cadj, cmatch, rmatch):
-        carry = (ecol, cadj, cmatch, rmatch, jnp.bool_(True))
-        carry = jax.lax.while_loop(cond, round_fn, carry)
-        return carry[2], carry[3]
-
-    return fn
-
-
-@functools.lru_cache(maxsize=256)
-def _jitted(nc: int, nr: int):
-    return jax.jit(_build(nc, nr))
+def _run_init(g: BipartiteCSR, name: str) -> Tuple[np.ndarray, np.ndarray]:
+    state = Matcher(warm_start=name).init(DeviceCSR.from_host(g))
+    return state.to_host()
 
 
 def cheap_matching_jax(g: BipartiteCSR) -> Tuple[np.ndarray, np.ndarray]:
-    nc, nr = g.nc, g.nr
-    cm = jnp.full(nc + 1, jnp.int32(-1)).at[nc].set(jnp.int32(-3))
-    rm = jnp.full(nr + 1, jnp.int32(-1)).at[nr].set(jnp.int32(-3))
-    cmj, rmj = _jitted(nc, nr)(jnp.asarray(g.ecol), jnp.asarray(g.cadj), cm, rm)
-    return np.asarray(cmj)[:nc], np.asarray(rmj)[:nr]
+    return _run_init(g, "cheap")

@@ -33,6 +33,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:                                       # jax >= 0.5 exposes it top-level
+    from jax import shard_map as _shard_map
+except ImportError:                        # pragma: no cover - version compat
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from .csr import BipartiteCSR
 from .matcher import (FOUND, IINF, L0, NEG, UNVISITED, MatcherConfig,
                       _alternate, _cardinality, _fix_matching)
@@ -139,11 +144,21 @@ def _build_dist_fn(nc: int, nr: int, cfg: MatcherConfig, mesh: Mesh,
             outer_cond, outer_body, carry)
         return cmatch, rmatch, phases, fallbacks
 
+    # disable replication checking: jax<=0.4 has no replication rule for
+    # while_loop (kwarg is check_rep there, check_vma in newer releases)
+    import inspect
+    smap_params = inspect.signature(_shard_map).parameters
+    kw = {}
+    if "check_rep" in smap_params:
+        kw["check_rep"] = False
+    elif "check_vma" in smap_params:
+        kw["check_vma"] = False
     return jax.jit(
-        jax.shard_map(
+        _shard_map(
             shard_body, mesh=mesh,
             in_specs=(P(axis), P(axis), P(), P()),
             out_specs=(P(), P(), P(), P()),
+            **kw,
         ))
 
 

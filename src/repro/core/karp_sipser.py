@@ -1,94 +1,23 @@
-"""Karp–Sipser initialization, data-parallel (beyond the paper's cheap init).
+"""Numpy-compat wrapper for the Karp–Sipser warm start (beyond-paper).
 
-The matching literature's stronger initializer ([8] §4, Magun '98): while
-the residual graph has a degree-1 vertex, matching its only edge is optimal;
-when none remains, fall back to greedy.  Sequential KS peels one vertex at a
-time; the TPU adaptation peels *all* current degree-1 vertices per round
-(speculatively — two degree-1 columns may claim one row) with the same
-min-scatter conflict resolution + feasibility repair as the main matcher,
-then finishes with the parallel cheap matching on the residual.
-
-Quality: on the benchmark suite KS leaves ~2-4x fewer unmatched vertices
-than cheap matching (benchmarks/table_init.py), which cuts matcher phases.
+The pure peel-then-greedy initializer lives in
+:mod:`repro.matching.warmstart` (registry name ``"karp_sipser"``); see that
+module for the algorithm notes.  Quality: on the benchmark suite KS leaves
+~2-4x fewer unmatched vertices than cheap matching
+(benchmarks/table_init.py), which cuts matcher phases.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.matching.warmstart import karp_sipser_init                # noqa: F401
+
+from .cheap import _run_init
 from .csr import BipartiteCSR
-
-IINF = jnp.int32(2**30)
-
-
-def _build(nc: int, nr: int):
-    def degree_round(carry):
-        ecol, cadj, cmatch, rmatch, _ = carry
-        alive = (cmatch[ecol] == -1) & (rmatch[cadj] == -1)
-        one = jnp.int32(1)
-        cdeg = jnp.zeros(nc + 1, jnp.int32).at[
-            jnp.where(alive, ecol, nc)].add(one)
-        rdeg = jnp.zeros(nr + 1, jnp.int32).at[
-            jnp.where(alive, cadj, nr)].add(one)
-        # forced edges: endpoint with residual degree 1
-        forced = alive & ((cdeg[ecol] == 1) | (rdeg[cadj] == 1))
-
-        # speculative commit of all forced edges, min-scatter per column/row
-        prop_r = jnp.full(nc + 1, IINF).at[
-            jnp.where(forced, ecol, nc)].min(jnp.where(forced, cadj, IINF))
-        col_has = prop_r < IINF
-        # rows accept lowest proposing column among columns that picked them
-        cols = jnp.arange(nc + 1, dtype=jnp.int32)
-        prop_c = jnp.full(nr + 1, IINF).at[
-            jnp.where(col_has, prop_r, nr)].min(jnp.where(col_has, cols,
-                                                          IINF))
-        rows = jnp.arange(nr + 1, dtype=jnp.int32)
-        won_r = prop_c < IINF                       # row r matched to prop_c[r]
-        rmatch = jnp.where(won_r & (rmatch == -1), prop_c, rmatch)
-        # commit winning columns (repair: only pairs where row accepted col)
-        won_pair = won_r & (rmatch == prop_c)
-        cmatch = cmatch.at[jnp.where(won_pair, jnp.clip(prop_c, 0, nc), nc)
-                           ].max(jnp.where(won_pair, rows, jnp.int32(-1)))
-        cmatch = cmatch.at[nc].set(jnp.int32(-3))
-        rmatch = rmatch.at[nr].set(jnp.int32(-3))
-        progress = jnp.any(forced)
-        return ecol, cadj, cmatch, rmatch, progress
-
-    def cond(carry):
-        return carry[-1]
-
-    def fn(ecol, cadj, cmatch, rmatch):
-        carry = (ecol, cadj, cmatch, rmatch, jnp.bool_(True))
-        carry = jax.lax.while_loop(cond, degree_round, carry)
-        return carry[2], carry[3]
-
-    return fn
-
-
-@functools.lru_cache(maxsize=256)
-def _jitted(nc: int, nr: int):
-    return jax.jit(_build(nc, nr))
 
 
 def karp_sipser_jax(g: BipartiteCSR) -> Tuple[np.ndarray, np.ndarray]:
     """KS degree-1 peeling rounds, then parallel greedy on the residual."""
-    from .cheap import _jitted as _cheap_jitted
-
-    nc, nr = g.nc, g.nr
-    cm = jnp.full(nc + 1, jnp.int32(-1)).at[nc].set(jnp.int32(-3))
-    rm = jnp.full(nr + 1, jnp.int32(-1)).at[nr].set(jnp.int32(-3))
-    ecol, cadj = jnp.asarray(g.ecol), jnp.asarray(g.cadj)
-    cmj, rmj = _jitted(nc, nr)(ecol, cadj, cm, rm)
-    cmj, rmj = _cheap_jitted(nc, nr)(ecol, cadj, cmj, rmj)
-    # repair any asymmetric remnants of the speculative commits
-    rows = jnp.arange(nr + 1, dtype=jnp.int32)
-    cols = jnp.arange(nc + 1, dtype=jnp.int32)
-    ok_r = (rmj >= 0) & (cmj[jnp.clip(rmj, 0, nc)] == rows)
-    rmj = jnp.where((rmj >= 0) & ~ok_r, jnp.int32(-1), rmj)
-    ok_c = (cmj >= 0) & (rmj[jnp.clip(cmj, 0, nr)] == cols)
-    cmj = jnp.where((cmj >= 0) & ~ok_c, jnp.int32(-1), cmj)
-    return np.asarray(cmj)[:nc], np.asarray(rmj)[:nr]
+    return _run_init(g, "karp_sipser")

@@ -1,319 +1,32 @@
-"""JAX implementation of the paper's GPU matching algorithms (APFB / APsB).
+"""Numpy-compat wrapper over the device-resident ``repro.matching`` API.
 
-Mapping from the paper's CUDA kernels to TPU-friendly vector ops
-----------------------------------------------------------------
-The paper launches one CUDA thread per column (MT) or a constant thread grid
-(CT), each walking its CSR adjacency with benign write races.  Here a BFS
-level is a single *edge-parallel* vector operation over all ``nnz`` edges:
+The solver itself (the paper's APFB/APsB drivers, GPUBFS/GPUBFS-WR expansion,
+ALTERNATE + FIXMATCHING) lives in :mod:`repro.matching.solve` as pure
+shape-polymorphic JAX; this module keeps the original host-centric entry
+point :func:`maximum_matching` (numpy in / numpy out, stats as a dict) and
+re-exports the kernel internals for the instrumented benchmarks, the
+distributed matcher and the Pallas kernel tests.
 
-* the per-thread race "first writer wins" becomes a deterministic
-  ``min``-scatter (lowest proposing column wins) — same semantics class the
-  paper relies on, but reproducible;
-* ``ALTERNATE`` (Alg. 3) walks all augmenting paths in lock-step inside a
-  ``lax.while_loop``; the paper's line-8 predecessor check is a vector mask;
-* ``FIXMATCHING`` is the paper's repair pass, applied in both directions so
-  every phase ends with a *valid* (possibly sub-maximal) matching;
-* a cardinality guard re-runs ``ALTERNATE`` with a single walker on the
-  phase-start snapshot if the speculative phase failed to gain — this bounds
-  the outer loop by ``nc`` phases (engineering safeguard; the speculative
-  phase almost always gains, see benchmarks).
-
-State layout (all int32, one sentinel slot at the end of every array):
-``bfs``  (nc+1,)  BFS level per column; L0-1==1 means unvisited, L0==2 roots.
-``root`` (nc+1,)  root column of the BFS tree (GPUBFS-WR only).
-``pred`` (nr+1,)  predecessor column of a row in the BFS forest.
-``cmatch`` (nc+1,) / ``rmatch`` (nr+1,) the matching; -1 unmatched,
-rmatch==-2 flags an augmenting-path endpoint (paper's convention).
+New code should use :class:`repro.matching.Matcher` directly — it keeps
+graphs and matcher state on device and composes under ``jit``/``vmap``.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import math
 from typing import Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.matching.config import MatcherConfig, VARIANTS           # noqa: F401
+from repro.matching.solve import (FOUND, IINF, L0, NEG, UNVISITED,   # noqa: F401
+                                  _alternate, _cardinality,
+                                  _expand_level, _fix_matching,
+                                  default_block_edges, make_solver,
+                                  scatter_min)
+from repro.matching.api import Matcher
+from repro.matching.device_csr import DeviceCSR
+from repro.matching.state import MatchState
+
 from .csr import BipartiteCSR
-
-L0 = jnp.int32(2)            # paper's suggested start level (keeps bfs positive)
-UNVISITED = jnp.int32(1)     # L0 - 1
-FOUND = jnp.int32(0)         # L0 - 2 : root's augmenting path already found (WR)
-NEG = jnp.int32(-(2**30))    # sentinel level: never active, never unvisited
-IINF = jnp.int32(2**30)      # scatter-min identity
-
-
-@dataclasses.dataclass(frozen=True)
-class MatcherConfig:
-    """One of the paper's eight variants (2 algos x 2 BFS kernels x 2 schedules)."""
-
-    algo: str = "apfb"          # "apfb" (HKDW-like) | "apsb" (HK-like)
-    kernel: str = "gpubfs_wr"   # "gpubfs" | "gpubfs_wr"
-    schedule: str = "ct"        # "ct" | "mt" — edge-tile geometry (Pallas path)
-    wr_exact: bool = False      # the APsB-GPUBFS-WR refinement (negative-row encoding)
-    use_pallas: bool = False    # route frontier expansion through the Pallas kernel
-    max_phases: int = 0         # 0 = until maximum (bounded internally)
-    # beyond-paper: bound the BFS tail after the first augmenting level.
-    # 0 = paper-faithful (APsB stops immediately, APFB exhausts the
-    # frontier); k>0 on APFB = expand at most k more levels — interpolates
-    # between the paper's two drivers (benchmarks/perf_matcher.py).
-    tail_levels: int = 0
-
-    def __post_init__(self):
-        assert self.algo in ("apfb", "apsb")
-        assert self.kernel in ("gpubfs", "gpubfs_wr")
-        assert self.schedule in ("ct", "mt")
-        if self.wr_exact:
-            assert self.kernel == "gpubfs_wr"
-
-    @property
-    def name(self) -> str:
-        s = f"{self.algo}-{self.kernel}-{self.schedule}"
-        return s + ("-exact" if self.wr_exact else "")
-
-
-VARIANTS = tuple(
-    MatcherConfig(algo=a, kernel=k, schedule=s,
-                  wr_exact=(a == "apsb" and k == "gpubfs_wr"))
-    for a in ("apfb", "apsb")
-    for k in ("gpubfs", "gpubfs_wr")
-    for s in ("ct", "mt")
-)
-
-
-# ---------------------------------------------------------------------------
-# BFS level expansion — the paper's Algorithms 2 (GPUBFS) and 4 (GPUBFS-WR)
-# ---------------------------------------------------------------------------
-def _expand_level(ecol, cadj, bfs, root, pred, rmatch, level, *, wr: bool,
-                  wr_exact: bool, use_pallas: bool, block_edges: int):
-    """One level-synchronous frontier expansion. Returns updated state.
-
-    Edge-parallel: every edge (c, r) is one lane.  The per-row conflict
-    (several frontier columns reaching the same row) is resolved with a
-    deterministic min-scatter, standing in for the paper's benign race.
-    """
-    nc = bfs.shape[0] - 1
-    nr = pred.shape[0] - 1
-
-    if use_pallas:
-        from repro.kernels.frontier_expand.ops import frontier_expand as _fe
-        prop = _fe(ecol, cadj, bfs, root if wr else None, rmatch, level,
-                   block_edges=block_edges)
-    else:
-        active = bfs[ecol] == level                       # frontier edges
-        if wr:
-            myroot = root[ecol]
-            active &= bfs[myroot] >= UNVISITED            # early exit (Alg.4 l.6)
-        cm = rmatch[cadj]                                 # col matched to row
-        col_unvis = bfs[jnp.clip(cm, 0, nc)] == UNVISITED
-        target = active & ((cm >= 0) & col_unvis | (cm == -1))
-        prop = jnp.where(target, ecol, IINF)              # per-edge proposal
-
-    # per-row winner: lowest proposing column (deterministic "first writer")
-    row_ix = jnp.where(prop < IINF, cadj, nr)
-    winner = jnp.full(nr + 1, IINF, jnp.int32).at[row_ix].min(prop)
-    winner = winner.at[nr].set(IINF)
-    upd_r = winner < IINF                                 # (nr+1,) rows reached
-
-    pred = jnp.where(upd_r, winner, pred)
-    cm_r = rmatch                                         # row-wise matched col
-    visit_r = upd_r & (cm_r >= 0)                         # Alg.2 l.8-12
-    end_r = upd_r & (cm_r == -1)                          # Alg.2 l.14-17
-
-    bfs = bfs.at[jnp.where(visit_r, cm_r, nc)].set(level + 1)
-    if wr:
-        rootvals = root[jnp.clip(winner, 0, nc)]
-        root = root.at[jnp.where(visit_r, cm_r, nc)].set(
-            jnp.where(visit_r, rootvals, 0))
-        # mark the root "satisfied": plain WR writes L0-2, the exact variant
-        # encodes the endpoint row as -(r+1) so ALTERNATE can start only the
-        # winning endpoint of each tree (paper Sec. 3, last paragraph).
-        if wr_exact:
-            enc = -(jnp.arange(nr + 1, dtype=jnp.int32) + 1)
-        else:
-            enc = jnp.full(nr + 1, FOUND, jnp.int32)
-        bfs = bfs.at[jnp.where(end_r, rootvals, nc)].min(
-            jnp.where(end_r, enc, IINF))
-    rmatch = jnp.where(end_r, jnp.int32(-2), rmatch)
-    bfs = bfs.at[nc].set(NEG)                             # restore sentinel
-
-    vertex_inserted = jnp.any(visit_r)
-    aug_found = jnp.any(end_r)
-    return bfs, root, pred, rmatch, vertex_inserted, aug_found
-
-
-# ---------------------------------------------------------------------------
-# ALTERNATE (Alg. 3) + FIXMATCHING
-# ---------------------------------------------------------------------------
-def _alternate(cmatch, rmatch, pred, start_mask, max_steps):
-    """Lock-step speculative alternation of all augmenting paths.
-
-    ``start_mask`` selects the endpoint rows that launch walkers.  Writes of
-    concurrent walkers are merged with min-scatters; the paper's line-8
-    predecessor check breaks walkers that would chase another path.
-    """
-    nc = cmatch.shape[0] - 1
-    nr = rmatch.shape[0] - 1
-    rows = jnp.arange(nr + 1, dtype=jnp.int32)
-    cur0 = jnp.where(start_mask, rows, jnp.int32(-1))
-
-    def cond(carry):
-        cur, _, _, steps = carry
-        return jnp.any(cur >= 0) & (steps < max_steps)
-
-    def body(carry):
-        cur, cmatch, rmatch, steps = carry
-        active = cur >= 0
-        curc = jnp.clip(cur, 0, nr)
-        mc = pred[curc]                                   # matched_col
-        mcc = jnp.clip(mc, 0, nc)
-        mr = cmatch[mcc]                                  # matched_row (snapshot)
-        # paper line 8: if predecessor[matched_row] == matched_col: break
-        brk = active & (mr >= 0) & (pred[jnp.clip(mr, 0, nr)] == mc)
-        act = active & ~brk
-        # cmatch[mc] <- cur ; rmatch[cur] <- mc   (speculative, min-merged)
-        cprop = jnp.full(nc + 1, IINF, jnp.int32).at[
-            jnp.where(act, mcc, nc)].min(jnp.where(act, cur, IINF))
-        cprop = cprop.at[nc].set(IINF)
-        cmatch = jnp.where(cprop < IINF, cprop, cmatch)
-        rprop = jnp.full(nr + 1, IINF, jnp.int32).at[
-            jnp.where(act, curc, nr)].min(jnp.where(act, mc, IINF))
-        rprop = rprop.at[nr].set(IINF)
-        rmatch = jnp.where(rprop < IINF, rprop, rmatch)
-        cur = jnp.where(act, mr, jnp.int32(-1))
-        return cur, cmatch, rmatch, steps + 1
-
-    _, cmatch, rmatch, _ = jax.lax.while_loop(
-        cond, body, (cur0, cmatch, rmatch, jnp.int32(0)))
-    return cmatch, rmatch
-
-
-def _fix_matching(cmatch, rmatch):
-    """Paper's FIXMATCHING, both directions -> a valid matching.
-
-    rmatch[r] <- -1 where cmatch[rmatch[r]] != r, then the symmetric pass on
-    columns (needed because deterministic merging can strand a cmatch entry).
-    """
-    nc = cmatch.shape[0] - 1
-    nr = rmatch.shape[0] - 1
-    rows = jnp.arange(nr + 1, dtype=jnp.int32)
-    cols = jnp.arange(nc + 1, dtype=jnp.int32)
-    rmatch = jnp.where(rmatch == -2, jnp.int32(-1), rmatch)
-    ok_r = (rmatch >= 0) & (cmatch[jnp.clip(rmatch, 0, nc)] == rows)
-    rmatch = jnp.where((rmatch >= 0) & ~ok_r, jnp.int32(-1), rmatch)
-    ok_c = (cmatch >= 0) & (rmatch[jnp.clip(cmatch, 0, nr)] == cols)
-    cmatch = jnp.where((cmatch >= 0) & ~ok_c, jnp.int32(-1), cmatch)
-    return cmatch, rmatch
-
-
-def _cardinality(cmatch):
-    return jnp.sum((cmatch[:-1] >= 0).astype(jnp.int32))
-
-
-# ---------------------------------------------------------------------------
-# Drivers — Algorithm 1 (APsB) and its APFB variant
-# ---------------------------------------------------------------------------
-def _build_match_fn(nc: int, nr: int, cfg: MatcherConfig, block_edges: int):
-    wr = cfg.kernel == "gpubfs_wr"
-
-    def phase_bfs(ecol, cadj, cmatch, rmatch):
-        """Inner while of Alg. 1: level-synchronous BFS to exhaustion/first hit."""
-        cols = jnp.arange(nc + 1, dtype=jnp.int32)
-        bfs = jnp.where(cmatch >= 0, UNVISITED, L0)
-        bfs = bfs.at[nc].set(NEG)
-        root = jnp.where(cmatch >= 0, jnp.int32(nc), cols)  # own index if root
-        pred = jnp.full(nr + 1, jnp.int32(nc), jnp.int32)   # fresh each phase
-
-        def cond(c):
-            _, _, _, _, level, ins, aug, aug_lvl = c
-            go = ins
-            if cfg.algo == "apsb":
-                go = go & ~aug                               # Alg.1 l.9-10 break
-            elif cfg.tail_levels > 0:
-                # bounded tail: expand at most tail_levels past the first
-                # augmenting level (beyond-paper, see MatcherConfig)
-                go = go & (level <= aug_lvl + cfg.tail_levels)
-            return go
-
-        def body(c):
-            bfs, root, pred, rmatch, level, _, aug, aug_lvl = c
-            bfs, root, pred, rmatch, ins, aug_l = _expand_level(
-                ecol, cadj, bfs, root, pred, rmatch, level, wr=wr,
-                wr_exact=cfg.wr_exact, use_pallas=cfg.use_pallas,
-                block_edges=block_edges)
-            aug_lvl = jnp.where(aug_l & (aug_lvl == IINF), level, aug_lvl)
-            return (bfs, root, pred, rmatch, level + 1, ins, aug | aug_l,
-                    aug_lvl)
-
-        bfs, root, pred, rmatch, _, _, aug, _ = jax.lax.while_loop(
-            cond, body, (bfs, root, pred, rmatch, L0, jnp.bool_(True),
-                         jnp.bool_(False), IINF))
-        return bfs, root, pred, rmatch, aug
-
-    def start_mask_fn(bfs, root, rmatch):
-        mask = rmatch == -2
-        if cfg.wr_exact:
-            # only the winning endpoint of each satisfied tree starts a walker
-            enc = bfs[:-1]                                   # (nc,)
-            is_win = enc <= -1
-            endpoint = jnp.where(is_win, -(enc + 1), nr)
-            wins = jnp.zeros(nr + 1, bool).at[endpoint].set(True)
-            wins = wins.at[nr].set(False)
-            mask = mask & wins
-        return mask
-
-    max_steps = jnp.int32(2 * (min(nc, nr) + 2))
-
-    def outer_body(carry):
-        ecol, cadj, cmatch, rmatch, _, phases, fallbacks = carry
-        cm0, rm0 = cmatch, rmatch                            # phase snapshot
-        card0 = _cardinality(cm0)
-        bfs, root, pred, rmatch_b, aug = phase_bfs(ecol, cadj, cmatch, rmatch)
-
-        def do_phase(_):
-            mask = start_mask_fn(bfs, root, rmatch_b)
-            cm1, rm1 = _alternate(cm0, jnp.where(mask, jnp.int32(-2), rm0),
-                                  pred, mask, max_steps)
-            cm1, rm1 = _fix_matching(cm1, rm1)
-
-            def fallback(_):
-                # guard: speculative phase gained nothing -> augment exactly one
-                # shortest path on the snapshot (single walker cannot conflict).
-                any_ep = rmatch_b == -2
-                first = jnp.argmax(any_ep)                   # lowest endpoint row
-                one = jnp.zeros(nr + 1, bool).at[first].set(jnp.any(any_ep))
-                cm2, rm2 = _alternate(cm0, rm0, pred, one, max_steps)
-                return _fix_matching(cm2, rm2) + (jnp.int32(1),)
-
-            cm1, rm1, fb = jax.lax.cond(
-                _cardinality(cm1) > card0,
-                lambda _: (cm1, rm1, jnp.int32(0)), fallback, None)
-            return cm1, rm1, fb
-
-        cmatch, rmatch, fb = jax.lax.cond(
-            aug, do_phase, lambda _: (cm0, rm0, jnp.int32(0)), None)
-        return ecol, cadj, cmatch, rmatch, aug, phases + 1, fallbacks + fb
-
-    def outer_cond(carry):
-        *_, aug, phases, _ = carry
-        limit = cfg.max_phases if cfg.max_phases > 0 else nc + 2
-        return aug & (phases < limit)
-
-    def match_fn(ecol, cadj, cmatch, rmatch):
-        carry = (ecol, cadj, cmatch, rmatch, jnp.bool_(True), jnp.int32(0),
-                 jnp.int32(0))
-        carry = jax.lax.while_loop(outer_cond, outer_body, carry)
-        _, _, cmatch, rmatch, _, phases, fallbacks = carry
-        return cmatch, rmatch, phases, fallbacks
-
-    return match_fn
-
-
-@functools.lru_cache(maxsize=256)
-def _jitted_match(nc: int, nr: int, cfg: MatcherConfig, block_edges: int):
-    return jax.jit(_build_match_fn(nc, nr, cfg, block_edges))
 
 
 def maximum_matching(
@@ -325,28 +38,15 @@ def maximum_matching(
     """Run one of the paper's matcher variants to a maximum matching.
 
     Returns (cmatch, rmatch, stats) as numpy arrays of true (unpadded) size.
+    Thin host wrapper: uploads once, runs :meth:`Matcher.run`, downloads once.
     """
-    nc, nr = g.nc, g.nr
-    ecol = jnp.asarray(g.ecol)
-    cadj = jnp.asarray(g.cadj)
-    if cmatch0 is None:
-        cm = jnp.full(nc + 1, jnp.int32(-1))
-        rm = jnp.full(nr + 1, jnp.int32(-1))
-    else:
-        cm = jnp.concatenate([jnp.asarray(cmatch0, jnp.int32),
-                              jnp.array([-1], jnp.int32)])
-        rm = jnp.concatenate([jnp.asarray(rmatch0, jnp.int32),
-                              jnp.array([-1], jnp.int32)])
-    rm = rm.at[nr].set(jnp.int32(-3))                        # sentinel row slot
-    cm = cm.at[nc].set(jnp.int32(-3))
-    # CT: big fixed tile (constant "thread" count, coarse grain);
-    # MT: one-edge-per-lane fine grain -> smaller tiles.
-    desired = 4096 if cfg.schedule == "ct" else 512
-    block_edges = math.gcd(g.nnz_pad, desired)
-    fn = _jitted_match(nc, nr, cfg, block_edges)
-    cmj, rmj, phases, fallbacks = fn(ecol, cadj, cm, rm)
-    cmatch = np.asarray(cmj)[:nc]
-    rmatch = np.asarray(rmj)[:nr]
-    stats = {"phases": int(phases), "fallbacks": int(fallbacks),
+    graph = DeviceCSR.from_host(g)
+    state = None
+    if cmatch0 is not None:
+        state = MatchState.from_host(np.asarray(cmatch0, np.int32),
+                                     np.asarray(rmatch0, np.int32))
+    out = Matcher(cfg).run(graph, state)
+    cmatch, rmatch = out.to_host()
+    stats = {"phases": int(out.phases), "fallbacks": int(out.fallbacks),
              "cardinality": int((cmatch >= 0).sum()), "variant": cfg.name}
     return cmatch, rmatch, stats

@@ -1,0 +1,36 @@
+"""Device-resident matching API for the paper's GPU algorithms.
+
+The public surface of the reproduction:
+
+* :class:`DeviceCSR` — pytree bipartite graph (column-major CSR + the
+  edge-parallel view) that passes straight through ``jax.jit`` / ``jax.vmap``;
+* :class:`MatcherConfig` — one of the paper's eight variants;
+* :class:`Matcher` — facade whose :meth:`Matcher.run` composes a registered
+  warm start (``"none" | "cheap" | "karp_sipser"``) with the APFB/APsB solver
+  in ONE compiled program (no host hop between init and solve);
+* :class:`MatchState` / :class:`MatchStats` — pytree results that stay on
+  device until the caller asks;
+* :func:`match_many` — vmap-batched matching over a stacked ``DeviceCSR``
+  bucket (many concurrent matching requests, one dispatch);
+* an explicit compile cache keyed on (bucket shape, config, warm start),
+  replacing the scattered per-module ``functools.lru_cache`` jits.
+
+``repro.core.maximum_matching`` / ``cheap_matching_jax`` remain as thin
+numpy-compat wrappers over this package.
+"""
+from .config import MatcherConfig, VARIANTS
+from .device_csr import DeviceCSR
+from .state import MatchState, MatchStats
+from .warmstart import WARM_STARTS, register_warm_start, warm_start_names
+from .api import Matcher, match_many, maximum_matching_device
+from .cache import (compile_cache_clear, compile_cache_info,
+                    compile_cache_key, get_compiled)
+
+__all__ = [
+    "MatcherConfig", "VARIANTS",
+    "DeviceCSR", "MatchState", "MatchStats",
+    "Matcher", "match_many", "maximum_matching_device",
+    "WARM_STARTS", "register_warm_start", "warm_start_names",
+    "compile_cache_clear", "compile_cache_info", "compile_cache_key",
+    "get_compiled",
+]

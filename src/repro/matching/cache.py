@@ -1,0 +1,55 @@
+"""Explicit compile cache for matcher programs.
+
+One process-wide table keyed on ``(bucket shape, MatcherConfig, warm start,
+entry point)`` replaces the ``functools.lru_cache``-wrapped jits that used to
+be scattered across ``core/matcher.py`` and ``core/cheap.py``.  Centralizing
+it makes compilation observable (:func:`compile_cache_info`), evictable
+(:func:`compile_cache_clear`) and keyed on exactly the things that force a
+recompile: the padded bucket shape and the variant configuration.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Hashable, Tuple
+
+import jax
+
+MAX_ENTRIES = 256   # parity with the lru_cache maxsize this table replaced
+
+_CACHE: Dict[Hashable, Callable] = {}
+_HITS = 0
+_MISSES = 0
+
+
+def compile_cache_key(bucket_key: Tuple[int, ...], cfg, warm_start: str,
+                      entry: str) -> Hashable:
+    """Canonical key: (bucket shape, config, warm start, entry point)."""
+    return (bucket_key, cfg, warm_start, entry)
+
+
+def get_compiled(key: Hashable, build: Callable[[], Callable],
+                 static_argnums=()) -> Callable:
+    """Jitted program for ``key``, building (and jitting) it on first use."""
+    global _HITS, _MISSES
+    fn = _CACHE.get(key)
+    if fn is None:
+        _MISSES += 1
+        fn = jax.jit(build(), static_argnums=static_argnums)
+        while len(_CACHE) >= MAX_ENTRIES:        # LRU eviction
+            del _CACHE[next(iter(_CACHE))]
+        _CACHE[key] = fn
+    else:
+        _HITS += 1
+        _CACHE[key] = _CACHE.pop(key)            # move to MRU position
+    return fn
+
+
+def compile_cache_info() -> dict:
+    return {"entries": len(_CACHE), "hits": _HITS, "misses": _MISSES,
+            "keys": tuple(_CACHE)}
+
+
+def compile_cache_clear() -> None:
+    global _HITS, _MISSES
+    _CACHE.clear()
+    _HITS = 0
+    _MISSES = 0

@@ -1,0 +1,42 @@
+"""Matcher variant configuration (the paper's eight-variant matrix)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MatcherConfig:
+    """One of the paper's eight variants (2 algos x 2 BFS kernels x 2 schedules)."""
+
+    algo: str = "apfb"          # "apfb" (HKDW-like) | "apsb" (HK-like)
+    kernel: str = "gpubfs_wr"   # "gpubfs" | "gpubfs_wr"
+    schedule: str = "ct"        # "ct" | "mt" — edge-tile geometry (Pallas path)
+    wr_exact: bool = False      # the APsB-GPUBFS-WR refinement (negative-row encoding)
+    use_pallas: bool = False    # route frontier expansion through the Pallas kernel
+    max_phases: int = 0         # 0 = until maximum (bounded internally)
+    # beyond-paper: bound the BFS tail after the first augmenting level.
+    # 0 = paper-faithful (APsB stops immediately, APFB exhausts the
+    # frontier); k>0 on APFB = expand at most k more levels — interpolates
+    # between the paper's two drivers (benchmarks/perf_matcher.py).
+    tail_levels: int = 0
+
+    def __post_init__(self):
+        assert self.algo in ("apfb", "apsb")
+        assert self.kernel in ("gpubfs", "gpubfs_wr")
+        assert self.schedule in ("ct", "mt")
+        if self.wr_exact:
+            assert self.kernel == "gpubfs_wr"
+
+    @property
+    def name(self) -> str:
+        s = f"{self.algo}-{self.kernel}-{self.schedule}"
+        return s + ("-exact" if self.wr_exact else "")
+
+
+VARIANTS = tuple(
+    MatcherConfig(algo=a, kernel=k, schedule=s,
+                  wr_exact=(a == "apsb" and k == "gpubfs_wr"))
+    for a in ("apfb", "apsb")
+    for k in ("gpubfs", "gpubfs_wr")
+    for s in ("ct", "mt")
+)

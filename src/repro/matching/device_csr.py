@@ -1,0 +1,131 @@
+"""Device-resident bipartite CSR graph as a registered JAX pytree.
+
+``DeviceCSR`` mirrors :class:`repro.core.csr.BipartiteCSR` but its arrays are
+``jax.Array`` leaves, so a graph passes straight through ``jax.jit`` /
+``jax.vmap`` boundaries with no host transfer.  The true sizes ``nc``/``nr``
+are static pytree metadata (they define the array shapes and therefore the
+compiled program); the true edge count ``nnz`` stays a device scalar leaf so a
+stacked batch of graphs may differ in it (padding edges carry sentinel
+endpoints and are inert in every kernel).
+
+Size-bucket helpers (:meth:`DeviceCSR.pad_to`, :func:`bucket_nnz`) round the
+edge capacity up to a small set of shapes so the compile cache stays bounded,
+and :meth:`DeviceCSR.stack` builds the batched bucket consumed by
+:func:`repro.matching.match_many`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if TYPE_CHECKING:  # avoid a circular import; only needed for annotations
+    from repro.core.csr import BipartiteCSR
+
+LANE = 128  # TPU lane width; every edge capacity is a multiple of this
+
+
+def bucket_nnz(nnz: int, lane: int = LANE) -> int:
+    """Smallest power-of-two multiple of ``lane`` holding ``nnz`` edges."""
+    cap = lane
+    while cap < nnz:
+        cap *= 2
+    return cap
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DeviceCSR:
+    """Column-major CSR bipartite graph living on the accelerator.
+
+    Data leaves (batchable): ``cxadj`` (nc+1,), ``cadj``/``ecol``
+    (nnz_pad,), ``nnz`` scalar int32.  Static metadata: ``nc``, ``nr``.
+    """
+
+    cxadj: jax.Array
+    cadj: jax.Array
+    ecol: jax.Array
+    nnz: jax.Array
+    nc: int = dataclasses.field(metadata=dict(static=True))
+    nr: int = dataclasses.field(metadata=dict(static=True))
+
+    # -- shape/bucket introspection ------------------------------------------
+    @property
+    def nnz_pad(self) -> int:
+        return int(self.cadj.shape[-1])
+
+    @property
+    def batch_shape(self) -> Tuple[int, ...]:
+        return tuple(self.cadj.shape[:-1])
+
+    @property
+    def bucket_key(self) -> Tuple[int, ...]:
+        """The compile-relevant shape: (*batch, nc, nr, nnz_pad)."""
+        return self.batch_shape + (self.nc, self.nr, self.nnz_pad)
+
+    # -- host <-> device ------------------------------------------------------
+    @classmethod
+    def from_host(cls, g: "BipartiteCSR", pad_to: Optional[int] = None,
+                  device=None) -> "DeviceCSR":
+        """Upload a host graph, optionally repadding the edge capacity."""
+        cadj, ecol = g.cadj, g.ecol
+        if pad_to is not None and pad_to != g.nnz_pad:
+            assert pad_to >= g.nnz, (pad_to, g.nnz)
+            cadj = np.full(pad_to, g.nr, np.int32)
+            ecol = np.full(pad_to, g.nc, np.int32)
+            cadj[: g.nnz] = g.cadj[: g.nnz]
+            ecol[: g.nnz] = g.ecol[: g.nnz]
+        put = (lambda x: jax.device_put(x, device)) if device else jnp.asarray
+        return cls(cxadj=put(np.asarray(g.cxadj, np.int32)),
+                   cadj=put(np.asarray(cadj, np.int32)),
+                   ecol=put(np.asarray(ecol, np.int32)),
+                   nnz=put(np.int32(g.nnz)), nc=g.nc, nr=g.nr)
+
+    def to_host(self) -> "BipartiteCSR":
+        """Materialize back to the numpy container (one sync, for interop)."""
+        from repro.core.csr import BipartiteCSR
+        assert not self.batch_shape, "unstack a batched DeviceCSR first"
+        return BipartiteCSR(nc=self.nc, nr=self.nr, nnz=int(self.nnz),
+                            cxadj=np.asarray(self.cxadj),
+                            cadj=np.asarray(self.cadj),
+                            ecol=np.asarray(self.ecol))
+
+    # -- bucketing ------------------------------------------------------------
+    def pad_to(self, nnz_pad: int) -> "DeviceCSR":
+        """Grow the edge capacity on device (sentinel-fill the new slots)."""
+        cur = self.nnz_pad
+        if nnz_pad == cur:
+            return self
+        assert nnz_pad > cur, f"cannot shrink edge capacity {cur} -> {nnz_pad}"
+        extra = nnz_pad - cur
+        pad_shape = self.batch_shape + (extra,)
+        cadj = jnp.concatenate(
+            [self.cadj, jnp.full(pad_shape, self.nr, jnp.int32)], axis=-1)
+        ecol = jnp.concatenate(
+            [self.ecol, jnp.full(pad_shape, self.nc, jnp.int32)], axis=-1)
+        return dataclasses.replace(self, cadj=cadj, ecol=ecol)
+
+    def bucketed(self, lane: int = LANE) -> "DeviceCSR":
+        """Round the edge capacity up to the canonical power-of-two bucket."""
+        return self.pad_to(bucket_nnz(self.nnz_pad, lane))
+
+    # -- batching -------------------------------------------------------------
+    @staticmethod
+    def stack(graphs: Sequence["DeviceCSR"]) -> "DeviceCSR":
+        """Stack same-bucket graphs into one batched DeviceCSR (for vmap)."""
+        assert graphs, "empty graph batch"
+        g0 = graphs[0]
+        cap = max(g.nnz_pad for g in graphs)
+        graphs = [g.pad_to(cap) for g in graphs]
+        for g in graphs:
+            assert (g.nc, g.nr) == (g0.nc, g0.nr), \
+                f"bucket mismatch: {(g.nc, g.nr)} vs {(g0.nc, g0.nr)}"
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *graphs)
+
+    def unstack(self) -> Tuple["DeviceCSR", ...]:
+        assert self.batch_shape, "not a batched DeviceCSR"
+        n = self.batch_shape[0]
+        return tuple(jax.tree.map(lambda x: x[i], self) for i in range(n))

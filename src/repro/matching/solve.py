@@ -1,0 +1,301 @@
+"""Pure JAX solver for the paper's GPU matching algorithms (APFB / APsB).
+
+Mapping from the paper's CUDA kernels to TPU-friendly vector ops
+----------------------------------------------------------------
+The paper launches one CUDA thread per column (MT) or a constant thread grid
+(CT), each walking its CSR adjacency with benign write races.  Here a BFS
+level is a single *edge-parallel* vector operation over all ``nnz`` edges:
+
+* the per-thread race "first writer wins" becomes a deterministic
+  ``min``-scatter (lowest proposing column wins) — same semantics class the
+  paper relies on, but reproducible;
+* ``ALTERNATE`` (Alg. 3) walks all augmenting paths in lock-step inside a
+  ``lax.while_loop``; the paper's line-8 predecessor check is a vector mask;
+* ``FIXMATCHING`` is the paper's repair pass, applied in both directions so
+  every phase ends with a *valid* (possibly sub-maximal) matching;
+* a cardinality guard re-runs ``ALTERNATE`` with a single walker on the
+  phase-start snapshot if the speculative phase failed to gain — this bounds
+  the outer loop by ``nc`` phases (engineering safeguard; the speculative
+  phase almost always gains, see benchmarks).
+
+State layout (all int32, one sentinel slot at the end of every array):
+``bfs``  (nc+1,)  BFS level per column; L0-1==1 means unvisited, L0==2 roots.
+``root`` (nc+1,)  root column of the BFS tree (GPUBFS-WR only).
+``pred`` (nr+1,)  predecessor column of a row in the BFS forest.
+``cmatch`` (nc+1,) / ``rmatch`` (nr+1,) the matching; -1 unmatched,
+rmatch==-2 flags an augmenting-path endpoint (paper's convention).
+
+Everything here is a *pure function of its array arguments*: the problem
+sizes are derived from the (static) array shapes at trace time, so the same
+function composes under ``jax.jit``, ``jax.vmap`` (via :func:`make_solver`)
+and the warm-start registry with zero host transfers.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import MatcherConfig
+
+L0 = jnp.int32(2)            # paper's suggested start level (keeps bfs positive)
+UNVISITED = jnp.int32(1)     # L0 - 1
+FOUND = jnp.int32(0)         # L0 - 2 : root's augmenting path already found (WR)
+NEG = jnp.int32(-(2**30))    # sentinel level: never active, never unvisited
+IINF = jnp.int32(2**30)      # scatter-min identity
+
+
+def scatter_min(n: int, index, values):
+    """Deterministic "first writer wins": per-slot min over proposals.
+
+    ``index`` may use slot ``n`` as the discard sentinel; the sentinel slot is
+    reset to the identity so it never reads back as a winner.
+    """
+    out = jnp.full(n + 1, IINF, jnp.int32).at[index].min(values)
+    return out.at[n].set(IINF)
+
+
+# ---------------------------------------------------------------------------
+# BFS level expansion — the paper's Algorithms 2 (GPUBFS) and 4 (GPUBFS-WR)
+# ---------------------------------------------------------------------------
+def _expand_level(ecol, cadj, bfs, root, pred, rmatch, level, *, wr: bool,
+                  wr_exact: bool, use_pallas: bool, block_edges: int):
+    """One level-synchronous frontier expansion. Returns updated state.
+
+    Edge-parallel: every edge (c, r) is one lane.  The per-row conflict
+    (several frontier columns reaching the same row) is resolved with a
+    deterministic min-scatter, standing in for the paper's benign race.
+    """
+    nc = bfs.shape[0] - 1
+    nr = pred.shape[0] - 1
+
+    if use_pallas:
+        from repro.kernels.frontier_expand.ops import frontier_expand as _fe
+        prop = _fe(ecol, cadj, bfs, root if wr else None, rmatch, level,
+                   block_edges=block_edges)
+    else:
+        active = bfs[ecol] == level                       # frontier edges
+        if wr:
+            myroot = root[ecol]
+            active &= bfs[myroot] >= UNVISITED            # early exit (Alg.4 l.6)
+        cm = rmatch[cadj]                                 # col matched to row
+        col_unvis = bfs[jnp.clip(cm, 0, nc)] == UNVISITED
+        target = active & ((cm >= 0) & col_unvis | (cm == -1))
+        prop = jnp.where(target, ecol, IINF)              # per-edge proposal
+
+    # per-row winner: lowest proposing column (deterministic "first writer")
+    row_ix = jnp.where(prop < IINF, cadj, nr)
+    winner = scatter_min(nr, row_ix, prop)
+    upd_r = winner < IINF                                 # (nr+1,) rows reached
+
+    pred = jnp.where(upd_r, winner, pred)
+    cm_r = rmatch                                         # row-wise matched col
+    visit_r = upd_r & (cm_r >= 0)                         # Alg.2 l.8-12
+    end_r = upd_r & (cm_r == -1)                          # Alg.2 l.14-17
+
+    bfs = bfs.at[jnp.where(visit_r, cm_r, nc)].set(level + 1)
+    if wr:
+        rootvals = root[jnp.clip(winner, 0, nc)]
+        root = root.at[jnp.where(visit_r, cm_r, nc)].set(
+            jnp.where(visit_r, rootvals, 0))
+        # mark the root "satisfied": plain WR writes L0-2, the exact variant
+        # encodes the endpoint row as -(r+1) so ALTERNATE can start only the
+        # winning endpoint of each tree (paper Sec. 3, last paragraph).
+        if wr_exact:
+            enc = -(jnp.arange(nr + 1, dtype=jnp.int32) + 1)
+        else:
+            enc = jnp.full(nr + 1, FOUND, jnp.int32)
+        bfs = bfs.at[jnp.where(end_r, rootvals, nc)].min(
+            jnp.where(end_r, enc, IINF))
+    rmatch = jnp.where(end_r, jnp.int32(-2), rmatch)
+    bfs = bfs.at[nc].set(NEG)                             # restore sentinel
+
+    vertex_inserted = jnp.any(visit_r)
+    aug_found = jnp.any(end_r)
+    return bfs, root, pred, rmatch, vertex_inserted, aug_found
+
+
+# ---------------------------------------------------------------------------
+# ALTERNATE (Alg. 3) + FIXMATCHING
+# ---------------------------------------------------------------------------
+def _alternate(cmatch, rmatch, pred, start_mask, max_steps):
+    """Lock-step speculative alternation of all augmenting paths.
+
+    ``start_mask`` selects the endpoint rows that launch walkers.  Writes of
+    concurrent walkers are merged with min-scatters; the paper's line-8
+    predecessor check breaks walkers that would chase another path.
+    """
+    nc = cmatch.shape[0] - 1
+    nr = rmatch.shape[0] - 1
+    rows = jnp.arange(nr + 1, dtype=jnp.int32)
+    cur0 = jnp.where(start_mask, rows, jnp.int32(-1))
+
+    def cond(carry):
+        cur, _, _, steps = carry
+        return jnp.any(cur >= 0) & (steps < max_steps)
+
+    def body(carry):
+        cur, cmatch, rmatch, steps = carry
+        active = cur >= 0
+        curc = jnp.clip(cur, 0, nr)
+        mc = pred[curc]                                   # matched_col
+        mcc = jnp.clip(mc, 0, nc)
+        mr = cmatch[mcc]                                  # matched_row (snapshot)
+        # paper line 8: if predecessor[matched_row] == matched_col: break
+        brk = active & (mr >= 0) & (pred[jnp.clip(mr, 0, nr)] == mc)
+        act = active & ~brk
+        # cmatch[mc] <- cur ; rmatch[cur] <- mc   (speculative, min-merged)
+        cprop = scatter_min(nc, jnp.where(act, mcc, nc),
+                            jnp.where(act, cur, IINF))
+        cmatch = jnp.where(cprop < IINF, cprop, cmatch)
+        rprop = scatter_min(nr, jnp.where(act, curc, nr),
+                            jnp.where(act, mc, IINF))
+        rmatch = jnp.where(rprop < IINF, rprop, rmatch)
+        cur = jnp.where(act, mr, jnp.int32(-1))
+        return cur, cmatch, rmatch, steps + 1
+
+    _, cmatch, rmatch, _ = jax.lax.while_loop(
+        cond, body, (cur0, cmatch, rmatch, jnp.int32(0)))
+    return cmatch, rmatch
+
+
+def _fix_matching(cmatch, rmatch):
+    """Paper's FIXMATCHING, both directions -> a valid matching.
+
+    rmatch[r] <- -1 where cmatch[rmatch[r]] != r, then the symmetric pass on
+    columns (needed because deterministic merging can strand a cmatch entry).
+    """
+    nc = cmatch.shape[0] - 1
+    nr = rmatch.shape[0] - 1
+    rows = jnp.arange(nr + 1, dtype=jnp.int32)
+    cols = jnp.arange(nc + 1, dtype=jnp.int32)
+    rmatch = jnp.where(rmatch == -2, jnp.int32(-1), rmatch)
+    ok_r = (rmatch >= 0) & (cmatch[jnp.clip(rmatch, 0, nc)] == rows)
+    rmatch = jnp.where((rmatch >= 0) & ~ok_r, jnp.int32(-1), rmatch)
+    ok_c = (cmatch >= 0) & (rmatch[jnp.clip(cmatch, 0, nr)] == cols)
+    cmatch = jnp.where((cmatch >= 0) & ~ok_c, jnp.int32(-1), cmatch)
+    return cmatch, rmatch
+
+
+def _cardinality(cmatch):
+    return jnp.sum((cmatch[:-1] >= 0).astype(jnp.int32))
+
+
+def default_block_edges(nnz_pad: int, schedule: str) -> int:
+    """Edge-tile size for the Pallas frontier kernel.
+
+    CT: big fixed tile (constant "thread" count, coarse grain);
+    MT: one-edge-per-lane fine grain -> smaller tiles.
+    """
+    desired = 4096 if schedule == "ct" else 512
+    return math.gcd(nnz_pad, desired)
+
+
+# ---------------------------------------------------------------------------
+# Drivers — Algorithm 1 (APsB) and its APFB variant
+# ---------------------------------------------------------------------------
+def make_solver(cfg: MatcherConfig):
+    """Build the pure matcher ``(ecol, cadj, cmatch, rmatch) ->
+    (cmatch, rmatch, phases, fallbacks)``.
+
+    Shape-polymorphic: ``nc``/``nr``/``block_edges`` are derived from the
+    argument shapes at trace time, so one returned function serves every size
+    bucket and closes under ``jit`` and ``vmap``.
+    """
+    wr = cfg.kernel == "gpubfs_wr"
+
+    def match_fn(ecol, cadj, cmatch, rmatch):
+        nc = cmatch.shape[0] - 1
+        nr = rmatch.shape[0] - 1
+        block_edges = default_block_edges(int(ecol.shape[0]), cfg.schedule)
+
+        def phase_bfs(cmatch, rmatch):
+            """Inner while of Alg. 1: level-synchronous BFS to exhaustion/first hit."""
+            cols = jnp.arange(nc + 1, dtype=jnp.int32)
+            bfs = jnp.where(cmatch >= 0, UNVISITED, L0)
+            bfs = bfs.at[nc].set(NEG)
+            root = jnp.where(cmatch >= 0, jnp.int32(nc), cols)  # own index if root
+            pred = jnp.full(nr + 1, jnp.int32(nc), jnp.int32)   # fresh each phase
+
+            def cond(c):
+                _, _, _, _, level, ins, aug, aug_lvl = c
+                go = ins
+                if cfg.algo == "apsb":
+                    go = go & ~aug                               # Alg.1 l.9-10 break
+                elif cfg.tail_levels > 0:
+                    # bounded tail: expand at most tail_levels past the first
+                    # augmenting level (beyond-paper, see MatcherConfig)
+                    go = go & (level <= aug_lvl + cfg.tail_levels)
+                return go
+
+            def body(c):
+                bfs, root, pred, rmatch, level, _, aug, aug_lvl = c
+                bfs, root, pred, rmatch, ins, aug_l = _expand_level(
+                    ecol, cadj, bfs, root, pred, rmatch, level, wr=wr,
+                    wr_exact=cfg.wr_exact, use_pallas=cfg.use_pallas,
+                    block_edges=block_edges)
+                aug_lvl = jnp.where(aug_l & (aug_lvl == IINF), level, aug_lvl)
+                return (bfs, root, pred, rmatch, level + 1, ins, aug | aug_l,
+                        aug_lvl)
+
+            bfs, root, pred, rmatch, _, _, aug, _ = jax.lax.while_loop(
+                cond, body, (bfs, root, pred, rmatch, L0, jnp.bool_(True),
+                             jnp.bool_(False), IINF))
+            return bfs, root, pred, rmatch, aug
+
+        def start_mask_fn(bfs, root, rmatch):
+            mask = rmatch == -2
+            if cfg.wr_exact:
+                # only the winning endpoint of each satisfied tree starts a walker
+                enc = bfs[:-1]                                   # (nc,)
+                is_win = enc <= -1
+                endpoint = jnp.where(is_win, -(enc + 1), nr)
+                wins = jnp.zeros(nr + 1, bool).at[endpoint].set(True)
+                wins = wins.at[nr].set(False)
+                mask = mask & wins
+            return mask
+
+        max_steps = jnp.int32(2 * (min(nc, nr) + 2))
+
+        def outer_body(carry):
+            cmatch, rmatch, _, phases, fallbacks = carry
+            cm0, rm0 = cmatch, rmatch                            # phase snapshot
+            card0 = _cardinality(cm0)
+            bfs, root, pred, rmatch_b, aug = phase_bfs(cmatch, rmatch)
+
+            def do_phase(_):
+                mask = start_mask_fn(bfs, root, rmatch_b)
+                cm1, rm1 = _alternate(cm0, jnp.where(mask, jnp.int32(-2), rm0),
+                                      pred, mask, max_steps)
+                cm1, rm1 = _fix_matching(cm1, rm1)
+
+                def fallback(_):
+                    # guard: speculative phase gained nothing -> augment exactly one
+                    # shortest path on the snapshot (single walker cannot conflict).
+                    any_ep = rmatch_b == -2
+                    first = jnp.argmax(any_ep)                   # lowest endpoint row
+                    one = jnp.zeros(nr + 1, bool).at[first].set(jnp.any(any_ep))
+                    cm2, rm2 = _alternate(cm0, rm0, pred, one, max_steps)
+                    return _fix_matching(cm2, rm2) + (jnp.int32(1),)
+
+                cm1, rm1, fb = jax.lax.cond(
+                    _cardinality(cm1) > card0,
+                    lambda _: (cm1, rm1, jnp.int32(0)), fallback, None)
+                return cm1, rm1, fb
+
+            cmatch, rmatch, fb = jax.lax.cond(
+                aug, do_phase, lambda _: (cm0, rm0, jnp.int32(0)), None)
+            return cmatch, rmatch, aug, phases + 1, fallbacks + fb
+
+        def outer_cond(carry):
+            *_, aug, phases, _ = carry
+            limit = cfg.max_phases if cfg.max_phases > 0 else nc + 2
+            return aug & (phases < limit)
+
+        carry = (cmatch, rmatch, jnp.bool_(True), jnp.int32(0), jnp.int32(0))
+        carry = jax.lax.while_loop(outer_cond, outer_body, carry)
+        cmatch, rmatch, _, phases, fallbacks = carry
+        return cmatch, rmatch, phases, fallbacks
+
+    return match_fn

@@ -1,0 +1,159 @@
+"""Pluggable warm-start registry: pure on-device matching initializers.
+
+Every entry is a pure function ``(ecol, cadj, cmatch, rmatch) ->
+(cmatch, rmatch)`` over sentinel-padded int32 vectors, so
+:meth:`repro.matching.Matcher.run` can fuse *init + solve* into one compiled
+program — the warm start never round-trips through the host (the old
+``cheap_matching_jax``/``karp_sipser_jax`` wrappers did numpy in/out between
+init and matcher).
+
+Built-ins: ``"none"`` (cold), ``"cheap"`` (the paper's greedy warm start),
+``"karp_sipser"`` (beyond-paper degree-1 peeling + greedy residual).  Register
+custom initializers with :func:`register_warm_start`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .solve import IINF, _fix_matching, scatter_min
+
+InitFn = Callable[[jax.Array, jax.Array, jax.Array, jax.Array],
+                  Tuple[jax.Array, jax.Array]]
+
+
+def none_init(ecol, cadj, cmatch, rmatch):
+    """Cold start: pass the incoming (all-unmatched) state through."""
+    del ecol, cadj
+    return cmatch, rmatch
+
+
+def cheap_init(ecol, cadj, cmatch, rmatch):
+    """Parallel cheap matching (the paper's common warm start).
+
+    Speculative round-based greedy (propose -> resolve -> commit): each round
+    every unmatched column proposes its lowest-index unmatched neighbor row;
+    each proposed row accepts its lowest proposing column; accepted pairs
+    commit.  Rounds repeat until no proposal survives -> a maximal greedy
+    matching (quality comparable to sequential cheap matching).
+    """
+    nc = cmatch.shape[0] - 1
+    nr = rmatch.shape[0] - 1
+
+    def round_fn(carry):
+        cmatch, rmatch, _ = carry
+        col_free = cmatch[ecol] == -1
+        row_free = rmatch[cadj] == -1
+        cand = jnp.where(col_free & row_free, cadj, IINF)
+        best_r = scatter_min(nc, ecol, cand)
+        cols = jnp.arange(nc + 1, dtype=jnp.int32)
+        propose = best_r < IINF
+        best_c = scatter_min(nr, jnp.where(propose, best_r, nr),
+                             jnp.where(propose, cols, IINF))
+        won = best_c < IINF                                  # per-row accept
+        rows = jnp.arange(nr + 1, dtype=jnp.int32)
+        rmatch = jnp.where(won, best_c, rmatch)
+        cmatch = cmatch.at[jnp.where(won, best_c, nc)].set(
+            jnp.where(won, rows, cmatch[nc]))
+        cmatch = cmatch.at[nc].set(jnp.int32(-3))
+        return cmatch, rmatch, jnp.any(won)
+
+    def cond(carry):
+        return carry[-1]
+
+    cmatch, rmatch, _ = jax.lax.while_loop(
+        cond, round_fn, (cmatch, rmatch, jnp.bool_(True)))
+    return cmatch, rmatch
+
+
+def karp_sipser_init(ecol, cadj, cmatch, rmatch):
+    """Karp–Sipser peeling, data-parallel (beyond the paper's cheap init).
+
+    While the residual graph has a degree-1 vertex, matching its only edge is
+    optimal; the TPU adaptation peels *all* current degree-1 vertices per
+    round (speculatively) with min-scatter conflict resolution, then finishes
+    with the parallel cheap matching on the residual and a repair pass.  All
+    three stages fuse into the caller's program — no host hop.
+    """
+    nc = cmatch.shape[0] - 1
+    nr = rmatch.shape[0] - 1
+
+    def degree_round(carry):
+        cmatch, rmatch, _ = carry
+        alive = (cmatch[ecol] == -1) & (rmatch[cadj] == -1)
+        one = jnp.int32(1)
+        cdeg = jnp.zeros(nc + 1, jnp.int32).at[
+            jnp.where(alive, ecol, nc)].add(one)
+        rdeg = jnp.zeros(nr + 1, jnp.int32).at[
+            jnp.where(alive, cadj, nr)].add(one)
+        # forced edges: endpoint with residual degree 1
+        forced = alive & ((cdeg[ecol] == 1) | (rdeg[cadj] == 1))
+
+        # speculative commit of all forced edges, min-scatter per column/row
+        prop_r = scatter_min(nc, jnp.where(forced, ecol, nc),
+                             jnp.where(forced, cadj, IINF))
+        col_has = prop_r < IINF
+        # rows accept lowest proposing column among columns that picked them
+        cols = jnp.arange(nc + 1, dtype=jnp.int32)
+        prop_c = scatter_min(nr, jnp.where(col_has, prop_r, nr),
+                             jnp.where(col_has, cols, IINF))
+        rows = jnp.arange(nr + 1, dtype=jnp.int32)
+        won_r = prop_c < IINF                       # row r matched to prop_c[r]
+        rmatch = jnp.where(won_r & (rmatch == -1), prop_c, rmatch)
+        # commit winning columns (repair: only pairs where row accepted col)
+        won_pair = won_r & (rmatch == prop_c)
+        cmatch = cmatch.at[jnp.where(won_pair, jnp.clip(prop_c, 0, nc), nc)
+                           ].max(jnp.where(won_pair, rows, jnp.int32(-1)))
+        cmatch = cmatch.at[nc].set(jnp.int32(-3))
+        rmatch = rmatch.at[nr].set(jnp.int32(-3))
+        return cmatch, rmatch, jnp.any(forced)
+
+    def cond(carry):
+        return carry[-1]
+
+    cmatch, rmatch, _ = jax.lax.while_loop(
+        cond, degree_round, (cmatch, rmatch, jnp.bool_(True)))
+    cmatch, rmatch = cheap_init(ecol, cadj, cmatch, rmatch)
+    # clear asymmetric remnants of the speculative commits (same symmetric
+    # repair the solver uses; the -2 endpoint clear is a no-op here)
+    return _fix_matching(cmatch, rmatch)
+
+
+WARM_STARTS: dict = {
+    "none": none_init,
+    "cheap": cheap_init,
+    "karp_sipser": karp_sipser_init,
+}
+_VERSIONS: dict = {name: 0 for name in WARM_STARTS}
+
+
+def register_warm_start(name: str, fn: InitFn) -> None:
+    """Add a custom initializer to the registry (pure device fn required).
+
+    Re-registering a name bumps its version so compiled programs built from
+    the previous initializer are not reused.
+    """
+    if not callable(fn):
+        raise TypeError(f"warm start {name!r} must be callable")
+    WARM_STARTS[name] = fn
+    _VERSIONS[name] = _VERSIONS.get(name, -1) + 1
+
+
+def warm_start_version(name: str) -> int:
+    """Monotonic per-name counter; part of the compile-cache key."""
+    return _VERSIONS.get(name, 0)
+
+
+def warm_start_names() -> tuple:
+    return tuple(WARM_STARTS)
+
+
+def get_warm_start(name: str) -> InitFn:
+    try:
+        return WARM_STARTS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown warm start {name!r}; registered: {warm_start_names()}"
+        ) from None

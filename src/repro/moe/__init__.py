@@ -1,3 +1,5 @@
-from .matching_router import route_matching, route_topk, router_stats
+from .matching_router import (route_matching, route_matching_exact,
+                              route_topk, router_stats)
 
-__all__ = ["route_matching", "route_topk", "router_stats"]
+__all__ = ["route_matching", "route_matching_exact", "route_topk",
+           "router_stats"]

@@ -27,14 +27,15 @@ recover most drops; benchmarks/table_router.py sweeps it).
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.matching import DeviceCSR, Matcher, MatcherConfig
+from repro.matching.solve import IINF
+
 NEG = -1e30
-IINF = jnp.int32(2**30)
 
 
 def _slot_and_evict(assign, n_experts: int, capacity: int):
@@ -204,6 +205,84 @@ def route_matching(logits, k: int, capacity: int, *, n_cand: int = 0,
         assign = _dedupe(assign)
 
     assign, slot = _slot_and_evict(assign, E, capacity)
+    p = jnp.take_along_axis(probs, jnp.clip(assign, 0, E - 1), axis=1)
+    p = jnp.where(assign >= 0, p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-9)
+    return assign, slot, p
+
+
+def route_matching_exact(logits, k: int, capacity: int, *, n_cand: int = 0,
+                         config: Optional[MatcherConfig] = None):
+    """Exact maximum-cardinality routing via the core matcher (device API).
+
+    The capacitated instance (token demand ``k``, expert capacity ``C``,
+    each token usable at most once per expert) is reduced to plain bipartite
+    matching with the classic degree-constrained-subgraph gadget: every
+    (token, candidate-expert) pair gets a gadget node pair ``u``/``v`` where
+    ``u`` (row) sees the token's ``k`` demand clones, ``v`` (column) sees
+    ``u`` plus the expert's ``C`` slots.  A maximum matching then uses each
+    gadget at most once — duplicate experts per token are structurally
+    impossible — and its cardinality is ``T*m`` + the number of routed
+    (token, expert) pairs, so maximum matching = minimum drops.
+
+    The graph is built as a :class:`DeviceCSR` *inside the traced program*
+    and solved with the public :class:`Matcher` facade (cheap warm start
+    fused with APFB), so the router shares the paper's matcher core instead
+    of re-implementing BFS/ALTERNATE.  Edge count is ``T*m*(k+1+C)`` —
+    linear in capacity, but the gold-standard path is still meant for
+    modest shapes; ``route_matching`` above is the fixed-phase approximation
+    for production step loops.  Returns (assign (T,k), slot (T,k),
+    combine_probs (T,k)) like the other routers.
+    """
+    T, E = logits.shape
+    m = n_cand or min(E, k + 2)
+    C = capacity
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    _, cand = jax.lax.top_k(logits, m)                          # (T, m)
+    cand = cand.astype(jnp.int32)
+
+    # columns: [T*k token clones | T*m gadget v-nodes]
+    # rows:    [T*m gadget u-nodes | E*C expert slots]
+    nc = T * k + T * m
+    nr = T * m + E * C
+    # clone edges: clone (t, j) -> u_(t, c) for every candidate c
+    clone_ids = jnp.arange(T * k, dtype=jnp.int32)
+    ecol_clone = jnp.repeat(clone_ids, m)
+    cadj_clone = ((clone_ids // k)[:, None] * m
+                  + jnp.arange(m, dtype=jnp.int32)).reshape(-1)
+    # gadget edges: v_(t, c) -> u_(t, c), then every slot of expert cand[t, c]
+    v_cols = T * k + jnp.arange(T * m, dtype=jnp.int32)
+    ecol_v = jnp.repeat(v_cols, 1 + C)
+    slot_rows = (T * m + cand.reshape(-1)[:, None] * C
+                 + jnp.arange(C, dtype=jnp.int32))              # (T*m, C)
+    cadj_v = jnp.concatenate(
+        [jnp.arange(T * m, dtype=jnp.int32)[:, None], slot_rows],
+        axis=1).reshape(-1)
+    ecol = jnp.concatenate([ecol_clone, ecol_v])
+    cadj = jnp.concatenate([cadj_clone, cadj_v])
+    degrees = jnp.concatenate([jnp.full(T * k, m, jnp.int32),
+                               jnp.full(T * m, 1 + C, jnp.int32)])
+    cxadj = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(degrees)])
+    graph = DeviceCSR(cxadj=cxadj.astype(jnp.int32), cadj=cadj, ecol=ecol,
+                      nnz=jnp.int32(ecol.shape[0]), nc=nc, nr=nr)
+
+    matcher = Matcher(config or MatcherConfig(), warm_start="cheap")
+    state = matcher.run(graph)
+
+    # gadget (t, c) routed iff its v-column matched an expert slot AND its
+    # u-row matched a token clone — a maximum matching may park a lone v on
+    # a slot without clone backing (same cardinality), which must not route
+    v_match = state.cmatch[T * k: T * k + T * m].reshape(T, m)
+    u_match = state.rmatch[: T * m].reshape(T, m)
+    used = (v_match >= T * m) & (u_match >= 0) & (u_match < T * k)  # (T, m)
+    # compact each token's routed candidates into its k demand slots; the
+    # u-backing check above bounds per-token used count by the k clones
+    pos = jnp.cumsum(used.astype(jnp.int32), axis=1) - 1        # rank among used
+    dest = jnp.where(used, jnp.minimum(pos, k), k)
+    assign = jnp.full((T, k + 1), jnp.int32(-1)).at[
+        jnp.arange(T, dtype=jnp.int32)[:, None], dest].set(
+            jnp.where(used, cand, -1))[:, :k]
+    assign, slot = _slot_and_evict(assign, E, C)
     p = jnp.take_along_axis(probs, jnp.clip(assign, 0, E - 1), axis=1)
     p = jnp.where(assign >= 0, p, 0.0)
     p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-9)

@@ -49,7 +49,11 @@ hc = analyze(compiled.as_text())
 mem = compiled.memory_analysis()
 assert hc["flops"] > 0 and hc["bytes"] > 0, hc
 assert hc["unknown_while"] == 0, hc
-assert mem.peak_memory_in_bytes > 0
+# jaxlib < 0.5 has no peak_memory_in_bytes; sum the component sizes instead
+peak = getattr(mem, "peak_memory_in_bytes",
+               mem.temp_size_in_bytes + mem.argument_size_in_bytes
+               + mem.output_size_in_bytes)
+assert peak > 0
 # scan over 4 layers: flops must exceed a single layer's dots by >= 3x
 # (the loop-aware correction actually multiplying)
 print("DRYRUN_SMOKE_OK", hc["flops"], hc["collective_bytes"])

@@ -1,0 +1,86 @@
+"""Hypothesis property tests for the matcher (skipped without hypothesis).
+
+`hypothesis` is a dev extra (`pip install -e .[dev]`); tier-1 must pass with
+or without it, hence the importorskip guard.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (BipartiteCSR, MatcherConfig, cheap_matching_jax,
+                        maximum_cardinality, maximum_matching,
+                        validate_matching)
+
+CONFIGS = [
+    MatcherConfig(algo="apfb", kernel="gpubfs"),
+    MatcherConfig(algo="apfb", kernel="gpubfs_wr"),
+    MatcherConfig(algo="apsb", kernel="gpubfs"),
+    MatcherConfig(algo="apsb", kernel="gpubfs_wr", wr_exact=True),
+]
+
+
+@st.composite
+def bip_graphs(draw):
+    nc = draw(st.integers(1, 60))
+    nr = draw(st.integers(1, 60))
+    nnz = draw(st.integers(1, 240))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    cols = rng.integers(0, nc, size=nnz)
+    rows = rng.integers(0, nr, size=nnz)
+    return BipartiteCSR.from_edges(cols, rows, nc, nr)
+
+
+@settings(max_examples=40, deadline=None)
+@given(g=bip_graphs(),
+       variant=st.sampled_from(range(len(CONFIGS))))
+def test_property_maximum_and_valid(g, variant):
+    """Any random bipartite graph: result is a VALID matching of MAXIMUM
+    cardinality (cardinality is unique even though matchings are not)."""
+    cfg = CONFIGS[variant]
+    opt = maximum_cardinality(g)
+    cm, rm, stats = maximum_matching(g, cfg)
+    card = validate_matching(g, cm, rm)
+    assert card == opt, stats
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=bip_graphs(), seed=st.integers(0, 100))
+def test_property_permutation_invariant_cardinality(g, seed):
+    """RCP transform (the paper's second instance set) preserves |M*|."""
+    gp = g.permuted(seed)
+    assert maximum_cardinality(g) == maximum_cardinality(gp)
+    cm, rm, _ = maximum_matching(gp, MatcherConfig())
+    assert validate_matching(gp, cm, rm) == maximum_cardinality(g)
+
+
+@settings(max_examples=20, deadline=None)
+@given(g=bip_graphs())
+def test_property_warm_start_consistent(g):
+    """Warm-starting from greedy reaches the same cardinality as cold."""
+    cm0, rm0 = cheap_matching_jax(g)
+    c_warm, r_warm, _ = maximum_matching(g, MatcherConfig(), cm0, rm0)
+    assert validate_matching(g, c_warm, r_warm) == maximum_cardinality(g)
+
+
+@settings(max_examples=25, deadline=None)
+@given(g=bip_graphs(), tail=st.integers(1, 6))
+def test_property_bounded_tail_reaches_maximum(g, tail):
+    """Beyond-paper bounded-tail APFB must still terminate at maximum
+    cardinality (the phase-gain guard preserves the invariant)."""
+    cfg = MatcherConfig(algo="apfb", kernel="gpubfs_wr", tail_levels=tail)
+    opt = maximum_cardinality(g)
+    cm, rm, stats = maximum_matching(g, cfg)
+    assert validate_matching(g, cm, rm) == opt, stats
+
+
+@settings(max_examples=20, deadline=None)
+@given(g=bip_graphs())
+def test_property_ks_valid_and_matcher_from_ks(g):
+    from repro.core import karp_sipser_jax
+    cm0, rm0 = karp_sipser_jax(g)
+    validate_matching(g, cm0, rm0)
+    cm, rm, _ = maximum_matching(g, MatcherConfig(), cm0, rm0)
+    assert validate_matching(g, cm, rm) == maximum_cardinality(g)

@@ -1,0 +1,41 @@
+"""Hypothesis property tests for the MoE routers (skipped without hypothesis).
+
+`hypothesis` is a dev extra (`pip install -e .[dev]`); tier-1 must pass with
+or without it, hence the importorskip guard.
+"""
+import jax
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.moe import route_matching, route_topk
+
+
+def _check_feasible(assign, slot, E, C, k):
+    assign, slot = np.asarray(assign), np.asarray(slot)
+    live = assign >= 0
+    loads = np.bincount(assign[live], minlength=E)
+    assert loads.max(initial=0) <= C
+    pairs = assign[live] * C + slot[live]
+    assert len(np.unique(pairs)) == len(pairs), "slot collision"
+    for t in range(assign.shape[0]):
+        a = assign[t][assign[t] >= 0]
+        assert len(set(a.tolist())) == len(a), "duplicate expert in token"
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), e_pow=st.integers(2, 4),
+       k=st.integers(1, 4), tight=st.floats(0.5, 1.5))
+def test_property_router_feasibility(seed, e_pow, k, tight):
+    T, E = 128, 2 ** e_pow
+    k = min(k, E)
+    C = max(2, int(tight * T * k / E))
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (T, E))
+    assign, slot, _ = route_matching(logits, k, C)
+    _check_feasible(assign, slot, E, C, k)
+    a1, s1, _ = route_topk(logits, k, C)
+    _check_feasible(a1, s1, E, C, k)
+    # matching never routes fewer tokens than greedy
+    assert (np.asarray(assign) >= 0).sum() >= (np.asarray(a1) >= 0).sum()
