@@ -1,9 +1,16 @@
-"""Inspection tool: top collective contributors per dry-run cell.
+"""Inspection tool: collective traffic, for both sides of the repo.
+
+Dry-run mode (default) — top collective contributors per LM dry-run cell:
 
     PYTHONPATH=src python -m benchmarks.collective_report [pattern]
 
-Prints the largest collective ops (shape x trip-count = bytes) recorded in
-experiments/dryrun/*.json — the profile §Perf iterations are driven by.
+Matcher mode — price the ShardedMatcher's one-pmin-per-BFS-level collective
+against the local per-shard expansion sweep (docs/architecture.md,
+"ShardedMatcher"): per instance, measured total BFS levels x the ring
+all-reduce bytes ``2*(D-1)/D * 4*(nr+1)`` per link, vs the local
+``O(nnz/D)`` edge traffic per level:
+
+    PYTHONPATH=src python -m benchmarks.collective_report --matcher [D]
 """
 from __future__ import annotations
 
@@ -15,6 +22,8 @@ from typing import List
 
 
 def run(pattern: str = "") -> List[str]:
+    """Largest collective ops (shape x trip-count = bytes) recorded in
+    experiments/dryrun/*.json."""
     rows = ["collectives.cell,gib,op"]
     for fn in sorted(glob.glob("experiments/dryrun/*.json")):
         if pattern and pattern not in fn:
@@ -28,5 +37,38 @@ def run(pattern: str = "") -> List[str]:
     return rows
 
 
+def matcher_rows(ndev: int = 8, scale: str = "tiny") -> List[str]:
+    """ShardedMatcher collective model on the paper instance suite.
+
+    ``levels`` is measured (instrumented per-level re-execution, same as
+    benchmarks/fig2_bfs_iters.py); bytes are the analytic ring-all-reduce /
+    edge-sweep volumes.  ``pmin_pct`` is the collective share of total
+    traffic — the scale-out headroom of the edge-partitioned design.
+    """
+    from benchmarks.fig2_bfs_iters import instrumented_phases
+    from repro.graphs import instance_sets
+    from repro.matching.device_csr import per_shard_nnz
+
+    rows = ["sharded_collectives.instance,nr,levels,devices,"
+            "pmin_kib_per_level,pmin_mib_total,local_mib_per_dev,pmin_pct"]
+    for name, g in instance_sets(scale).items():
+        levels = sum(instrumented_phases(g, "apfb"))
+        per_level = 2 * (ndev - 1) / ndev * 4 * (g.nr + 1)   # ring, bytes/link
+        pmin_total = levels * per_level
+        # local sweep: ecol + cadj reads and one proposal write per edge/level
+        # over each device's bucketed shard (mirrors DeviceCSR.shard padding)
+        edges_per_dev = per_shard_nnz(g.nnz_pad, ndev)
+        local_total = levels * 3 * 4 * edges_per_dev
+        rows.append(
+            f"{name},{g.nr},{levels},{ndev},{per_level / 2**10:.1f},"
+            f"{pmin_total / 2**20:.2f},{local_total / 2**20:.2f},"
+            f"{100 * pmin_total / (pmin_total + local_total):.1f}")
+    return rows
+
+
 if __name__ == "__main__":
-    print("\n".join(run(sys.argv[1] if len(sys.argv) > 1 else "")))
+    args = sys.argv[1:]
+    if args and args[0] == "--matcher":
+        print("\n".join(matcher_rows(int(args[1]) if len(args) > 1 else 8)))
+    else:
+        print("\n".join(run(args[0] if args else "")))

@@ -1,4 +1,5 @@
-"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+"""Roofline table from the dry-run artifacts (docs/architecture.md,
+"LM-substrate notes").
 
 Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
 per-(arch x shape x mesh): the three roofline terms in seconds, the dominant

@@ -10,8 +10,8 @@ import sys
 import time
 
 from . import (batch_matching, fig2_bfs_iters, fig35_speedups, perf_matcher,
-               roofline, table1_variants, table2_hardest, table_init,
-               table_router)
+               roofline, sharded_matching, table1_variants, table2_hardest,
+               table_init, table_router)
 
 BENCHES = {
     "table1": table1_variants.run,     # paper Table 1
@@ -20,9 +20,10 @@ BENCHES = {
     "fig35": fig35_speedups.run,       # paper Figures 3-5
     "router": table_router.run,        # framework integration (DESIGN §4)
     "init": table_init.run,            # KS vs cheap init (beyond-paper)
-    "perf_matcher": perf_matcher.run,  # EXPERIMENTS §Perf (matcher hillclimb)
-    "roofline": roofline.run,          # EXPERIMENTS §Roofline (from dry-run)
+    "perf_matcher": perf_matcher.run,  # matcher hillclimb (docs/architecture.md)
+    "roofline": roofline.run,          # roofline table (from dry-run artifacts)
     "batch": batch_matching.run,       # match_many serving throughput
+    "sharded": sharded_matching.run,   # ShardedMatcher vs single-device sweep
 }
 
 

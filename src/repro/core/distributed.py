@@ -1,200 +1,53 @@
-"""Distributed-memory matcher: edge-partitioned APFB over a device mesh.
+"""Numpy-compat wrapper over :class:`repro.matching.ShardedMatcher`.
 
-The paper closes with: "an out-of-core or distributed-memory type algorithm is
-amenable when the graph does not fit into the device ... We plan to
-investigate the techniques to obtain good matching performance for
-extreme-scale bipartite graphs."  This module is that algorithm, built on
-``shard_map``:
+The distributed edge-partitioned matcher (the paper's stated future work)
+lives in :mod:`repro.matching.sharded` and shares the APFB/APsB solve loop,
+warm-start registry, compile cache and Pallas frontier kernel with the
+single-device :class:`repro.matching.Matcher` — see ``docs/architecture.md``
+(design + per-level collective cost) and ``docs/paper_map.md``.  This module
+keeps only the original host-centric entry point (numpy in / numpy out,
+stats as a dict) for existing callers.
 
-* the edge list is 1-D sharded across the ``data`` axis of the mesh (each
-  device owns ``nnz/D`` edges — the natural analog of the paper's CT strided
-  edge ownership, at pod scale);
-* the O(n) BFS state (``bfs``/``root``/``pred``/``cmatch``/``rmatch``) is
-  replicated; each level every device computes proposals over its edge shard
-  and the per-row winners merge with one ``jax.lax.pmin`` — a single
-  all-reduce per BFS level, which is the minimal coordination any
-  level-synchronous distributed BFS needs;
-* ``ALTERNATE``/``FIXMATCHING`` act on replicated O(n) state and therefore run
-  redundantly-but-identically on every device (cheaper than sharding them:
-  their cost is O(n) per phase vs O(nnz/D) for expansion).
+New code should use :class:`repro.matching.ShardedMatcher` directly::
 
-Communication per level = one pmin over an (nr+1) int32 vector; for a mesh of
-D devices on ICI this is the standard ring all-reduce, 2*(D-1)/D * 4(nr+1)
-bytes per link. EXPERIMENTS.md §Roofline prices this against the local
-expansion cost.
+    graph = DeviceCSR.from_host(g).shard(mesh, "data")
+    state = ShardedMatcher(mesh, config=cfg, warm_start="cheap").run(graph)
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-try:                                       # jax >= 0.5 exposes it top-level
-    from jax import shard_map as _shard_map
-except ImportError:                        # pragma: no cover - version compat
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-from .csr import BipartiteCSR
-from .matcher import (FOUND, IINF, L0, NEG, UNVISITED, MatcherConfig,
-                      _alternate, _cardinality, _fix_matching)
-
-
-def _expand_shard(ecol, cadj, bfs, root, pred, rmatch, level, *, wr, axis):
-    """Local proposal sweep on this device's edge shard + one pmin merge."""
-    nc = bfs.shape[0] - 1
-    nr = pred.shape[0] - 1
-    active = bfs[ecol] == level
-    if wr:
-        active &= bfs[root[ecol]] >= UNVISITED
-    cm = rmatch[cadj]
-    col_unvis = bfs[jnp.clip(cm, 0, nc)] == UNVISITED
-    target = active & ((cm >= 0) & col_unvis | (cm == -1))
-    prop = jnp.where(target, ecol, IINF)
-
-    row_ix = jnp.where(prop < IINF, cadj, nr)
-    winner = jnp.full(nr + 1, IINF, jnp.int32).at[row_ix].min(prop)
-    winner = winner.at[nr].set(IINF)
-    winner = jax.lax.pmin(winner, axis)              # merge shards: 1 collective
-    upd_r = winner < IINF
-
-    pred = jnp.where(upd_r, winner, pred)
-    visit_r = upd_r & (rmatch >= 0)
-    end_r = upd_r & (rmatch == -1)
-    bfs = bfs.at[jnp.where(visit_r, rmatch, nc)].set(level + 1)
-    if wr:
-        rootvals = root[jnp.clip(winner, 0, nc)]
-        root = root.at[jnp.where(visit_r, rmatch, nc)].set(
-            jnp.where(visit_r, rootvals, 0))
-        bfs = bfs.at[jnp.where(end_r, rootvals, nc)].min(
-            jnp.where(end_r, FOUND, IINF))
-    rmatch = jnp.where(end_r, jnp.int32(-2), rmatch)
-    bfs = bfs.at[nc].set(NEG)
-    return bfs, root, pred, rmatch, jnp.any(visit_r), jnp.any(end_r)
-
-
-def _build_dist_fn(nc: int, nr: int, cfg: MatcherConfig, mesh: Mesh,
-                   axis: str):
-    wr = cfg.kernel == "gpubfs_wr"
-    max_steps = jnp.int32(2 * (min(nc, nr) + 2))
-
-    def shard_body(ecol, cadj, cmatch, rmatch):
-        cols = jnp.arange(nc + 1, dtype=jnp.int32)
-
-        def phase_bfs(cmatch, rmatch):
-            bfs = jnp.where(cmatch >= 0, UNVISITED, L0).at[nc].set(NEG)
-            root = jnp.where(cmatch >= 0, jnp.int32(nc), cols)
-            pred = jnp.full(nr + 1, jnp.int32(nc), jnp.int32)
-
-            def cond(c):
-                *_, ins, aug = c
-                go = ins
-                if cfg.algo == "apsb":
-                    go = go & ~aug
-                return go
-
-            def body(c):
-                bfs, root, pred, rmatch, level, _, aug = c
-                bfs, root, pred, rmatch, ins, aug_l = _expand_shard(
-                    ecol, cadj, bfs, root, pred, rmatch, level, wr=wr,
-                    axis=axis)
-                return bfs, root, pred, rmatch, level + 1, ins, aug | aug_l
-
-            bfs, root, pred, rmatch, _, _, aug = jax.lax.while_loop(
-                cond, body, (bfs, root, pred, rmatch, L0, jnp.bool_(True),
-                             jnp.bool_(False)))
-            return bfs, root, pred, rmatch, aug
-
-        def outer_body(carry):
-            cmatch, rmatch, _, phases, fallbacks = carry
-            cm0, rm0 = cmatch, rmatch
-            card0 = _cardinality(cm0)
-            bfs, root, pred, rmatch_b, aug = phase_bfs(cmatch, rmatch)
-
-            def do_phase(_):
-                mask = rmatch_b == -2
-                cm1, rm1 = _alternate(
-                    cm0, jnp.where(mask, jnp.int32(-2), rm0), pred, mask,
-                    max_steps)
-                cm1, rm1 = _fix_matching(cm1, rm1)
-
-                def fallback(_):
-                    first = jnp.argmax(mask)
-                    one = jnp.zeros(nr + 1, bool).at[first].set(jnp.any(mask))
-                    cm2, rm2 = _alternate(cm0, rm0, pred, one, max_steps)
-                    return _fix_matching(cm2, rm2) + (jnp.int32(1),)
-
-                return jax.lax.cond(
-                    _cardinality(cm1) > card0,
-                    lambda _: (cm1, rm1, jnp.int32(0)), fallback, None)
-
-            cmatch, rmatch, fb = jax.lax.cond(
-                aug, do_phase, lambda _: (cm0, rm0, jnp.int32(0)), None)
-            return cmatch, rmatch, aug, phases + 1, fallbacks + fb
-
-        def outer_cond(carry):
-            *_, aug, phases, _ = carry
-            return aug & (phases < nc + 2)
-
-        carry = (cmatch, rmatch, jnp.bool_(True), jnp.int32(0), jnp.int32(0))
-        cmatch, rmatch, _, phases, fallbacks = jax.lax.while_loop(
-            outer_cond, outer_body, carry)
-        return cmatch, rmatch, phases, fallbacks
-
-    # disable replication checking: jax<=0.4 has no replication rule for
-    # while_loop (kwarg is check_rep there, check_vma in newer releases)
-    import inspect
-    smap_params = inspect.signature(_shard_map).parameters
-    kw = {}
-    if "check_rep" in smap_params:
-        kw["check_rep"] = False
-    elif "check_vma" in smap_params:
-        kw["check_vma"] = False
-    return jax.jit(
-        _shard_map(
-            shard_body, mesh=mesh,
-            in_specs=(P(axis), P(axis), P(), P()),
-            out_specs=(P(), P(), P(), P()),
-            **kw,
-        ))
+from repro.matching import (DeviceCSR, MatcherConfig, MatchState,
+                            ShardedMatcher)
 
 
 def maximum_matching_distributed(
-    g: BipartiteCSR,
+    g,
     mesh: Mesh,
     cfg: MatcherConfig = MatcherConfig(),
     axis: str = "data",
     cmatch0: Optional[np.ndarray] = None,
     rmatch0: Optional[np.ndarray] = None,
 ) -> Tuple[np.ndarray, np.ndarray, dict]:
-    """Edge-partitioned distributed matcher. State replicated, edges sharded."""
-    nc, nr = g.nc, g.nr
-    ndev = mesh.shape[axis]
-    pad = ((g.nnz_pad + ndev - 1) // ndev) * ndev
-    if pad != g.nnz_pad:
-        g = BipartiteCSR.from_csr(g.cxadj, g.cadj[: g.nnz], nc, nr, pad_to=pad)
-    if cmatch0 is None:
-        cm = np.full(nc + 1, -1, np.int32)
-        rm = np.full(nr + 1, -1, np.int32)
-    else:
-        cm = np.concatenate([np.asarray(cmatch0, np.int32), [-1]])
-        rm = np.concatenate([np.asarray(rmatch0, np.int32), [-1]])
-    cm[nc], rm[nr] = -3, -3
-    edge_sh = NamedSharding(mesh, P(axis))
-    rep = NamedSharding(mesh, P())
-    ecol = jax.device_put(g.ecol, edge_sh)
-    cadj = jax.device_put(g.cadj, edge_sh)
-    cmj = jax.device_put(cm, rep)
-    rmj = jax.device_put(rm, rep)
-    fn = _build_dist_fn(nc, nr, cfg, mesh, axis)
-    cmo, rmo, phases, fallbacks = fn(ecol, cadj, cmj, rmj)
-    cmatch = np.asarray(cmo)[:nc]
-    rmatch = np.asarray(rmo)[:nr]
+    """Edge-partitioned distributed matcher. State replicated, edges sharded.
+
+    Thin host wrapper: uploads + shards once, runs
+    :meth:`ShardedMatcher.run`, downloads once.  ``g`` is a host
+    :class:`repro.core.csr.BipartiteCSR`.
+    """
+    graph = DeviceCSR.from_host(g).shard(mesh, axis)
+    state = None
+    if cmatch0 is not None:
+        state = MatchState.from_host(np.asarray(cmatch0, np.int32),
+                                     np.asarray(rmatch0, np.int32))
+    out = ShardedMatcher(mesh, axis, cfg).run(graph, state)
+    cmatch, rmatch = out.to_host()
     return cmatch, rmatch, {
-        "phases": int(phases), "fallbacks": int(fallbacks),
-        "cardinality": int((cmatch >= 0).sum()), "devices": int(ndev),
+        "phases": int(out.phases), "fallbacks": int(out.fallbacks),
+        "cardinality": int((cmatch >= 0).sum()),
+        "devices": int(mesh.shape[axis]),
         "variant": f"dist-{cfg.name}",
     }

@@ -26,8 +26,10 @@ whereas the proposal sweep is the dominant O(nnz)-per-level cost.
 
 VMEM budget (defaults): 3 state vectors of (n+1) int32 + 3 edge tiles of
 ``block_edges`` int32 = 4*(3n + 3*4096) bytes ~= 12n B + 48 KiB; for n = 1M
-that is ~12 MiB, inside the 16 MiB v5e VMEM; larger graphs shard the state
-over the mesh (core/distributed.py) before tiling.
+that is ~12 MiB, inside the 16 MiB v5e VMEM; larger graphs partition the
+edges over the mesh (repro.matching.ShardedMatcher) and each shard tiles its
+own slice.  (This budget math is also walked through in
+docs/architecture.md, "The Pallas frontier kernel".)
 """
 from __future__ import annotations
 

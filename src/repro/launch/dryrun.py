@@ -12,7 +12,8 @@ it, and records:
   * collective bytes   — parsed from the optimized HLO text per collective op,
 
 into experiments/dryrun/<arch>__<shape>__<mesh>.json, which
-benchmarks/roofline.py turns into EXPERIMENTS.md §Roofline.
+benchmarks/roofline.py turns into the roofline table
+(docs/architecture.md, "LM-substrate notes").
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch h2o-danube-1.8b \

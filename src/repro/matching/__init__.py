@@ -12,17 +12,24 @@ The public surface of the reproduction:
   device until the caller asks;
 * :func:`match_many` — vmap-batched matching over a stacked ``DeviceCSR``
   bucket (many concurrent matching requests, one dispatch);
-* an explicit compile cache keyed on (bucket shape, config, warm start),
-  replacing the scattered per-module ``functools.lru_cache`` jits.
+* :class:`ShardedMatcher` / :func:`match_sharded` — the same solve loop with
+  edges partitioned over a device mesh (:meth:`DeviceCSR.shard`), one
+  ``pmin`` collective per BFS level (the paper's stated future work);
+* an explicit compile cache keyed on (bucket shape, config, warm start, and
+  for the sharded path mesh/axis), replacing the scattered per-module
+  ``functools.lru_cache`` jits.
 
-``repro.core.maximum_matching`` / ``cheap_matching_jax`` remain as thin
-numpy-compat wrappers over this package.
+``repro.core.maximum_matching`` / ``cheap_matching_jax`` /
+``repro.core.distributed`` remain as thin numpy-compat wrappers over this
+package.  ``docs/architecture.md`` documents the design; ``docs/paper_map.md``
+maps every paper algorithm to its implementation here.
 """
 from .config import MatcherConfig, VARIANTS
 from .device_csr import DeviceCSR
 from .state import MatchState, MatchStats
 from .warmstart import WARM_STARTS, register_warm_start, warm_start_names
 from .api import Matcher, match_many, maximum_matching_device
+from .sharded import ShardedMatcher, match_sharded, mesh_cache_key
 from .cache import (compile_cache_clear, compile_cache_info,
                     compile_cache_key, get_compiled)
 
@@ -30,6 +37,7 @@ __all__ = [
     "MatcherConfig", "VARIANTS",
     "DeviceCSR", "MatchState", "MatchStats",
     "Matcher", "match_many", "maximum_matching_device",
+    "ShardedMatcher", "match_sharded", "mesh_cache_key",
     "WARM_STARTS", "register_warm_start", "warm_start_names",
     "compile_cache_clear", "compile_cache_info", "compile_cache_key",
     "get_compiled",

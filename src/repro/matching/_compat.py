@@ -1,0 +1,34 @@
+"""Version-compat shims for the multi-device matching path.
+
+``shard_map`` moved twice across JAX releases (``jax.experimental.shard_map``
+-> top-level ``jax.shard_map``) and its replication-checking kwarg was renamed
+(``check_rep`` -> ``check_vma``).  The matcher's level-synchronous solve loop
+is a ``lax.while_loop``, for which older releases have no replication rule, so
+the check must be disabled.  This module centralizes both quirks; everything
+else imports :func:`shard_map_no_check` from here instead of carrying its own
+try/except (the old ``core/distributed.py`` did exactly that, inline).
+"""
+from __future__ import annotations
+
+import inspect
+
+try:                                       # jax >= 0.5 exposes it top-level
+    from jax import shard_map as _shard_map
+except ImportError:                        # pragma: no cover - version compat
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+shard_map = _shard_map
+
+_NO_CHECK_KW = None
+for _kw in ("check_rep", "check_vma"):
+    if _kw in inspect.signature(_shard_map).parameters:
+        _NO_CHECK_KW = _kw
+        break
+
+
+def shard_map_no_check(f, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off (needed for while_loop
+    bodies), under whichever kwarg name this JAX release uses."""
+    kw = {_NO_CHECK_KW: False} if _NO_CHECK_KW else {}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

@@ -36,6 +36,14 @@ def bucket_nnz(nnz: int, lane: int = LANE) -> int:
     return cap
 
 
+def per_shard_nnz(nnz_pad: int, ndev: int, lane: int = LANE) -> int:
+    """Per-device edge capacity when sharding ``nnz_pad`` edges over ``ndev``
+    devices: each shard is itself a canonical bucket.  Shared by
+    :meth:`DeviceCSR.shard` and the collective cost model
+    (``benchmarks/collective_report.py --matcher``)."""
+    return bucket_nnz(-(-nnz_pad // ndev), lane)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class DeviceCSR:
@@ -111,6 +119,37 @@ class DeviceCSR:
     def bucketed(self, lane: int = LANE) -> "DeviceCSR":
         """Round the edge capacity up to the canonical power-of-two bucket."""
         return self.pad_to(bucket_nnz(self.nnz_pad, lane))
+
+    # -- multi-device sharding ------------------------------------------------
+    def shard(self, mesh, axis: str = "data") -> "DeviceCSR":
+        """Edge-partition the graph over one mesh axis (for ShardedMatcher).
+
+        The edge arrays (``ecol``/``cadj``) are 1-D sharded across the
+        ``axis`` devices — each owns an equal contiguous slice — while the
+        O(n) arrays (``cxadj``, ``nnz``) are replicated.  The edge capacity is
+        padded so every shard is itself a canonical power-of-two bucket
+        (:func:`bucket_nnz`): the result stays an ordinary ``DeviceCSR``
+        pytree whose :attr:`bucket_key` is cacheable, and each per-device
+        slice keeps the lane alignment the Pallas kernel tiles over.
+        Padding edges carry sentinel endpoints and are inert, as everywhere;
+        they accumulate at the tail, but the per-level sweep is a dense
+        vector op over every lane of a shard, so work per device is exactly
+        the shard capacity no matter how the real edges distribute.
+        """
+        assert not self.batch_shape, "shard() takes a single graph"
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        ndev = int(mesh.shape[axis])
+        per_shard = per_shard_nnz(self.nnz_pad, ndev)
+        g = self if ndev * per_shard == self.nnz_pad \
+            else self.pad_to(ndev * per_shard)
+        edges = NamedSharding(mesh, P(axis))
+        rep = NamedSharding(mesh, P())
+        return dataclasses.replace(
+            g,
+            ecol=jax.device_put(g.ecol, edges),
+            cadj=jax.device_put(g.cadj, edges),
+            cxadj=jax.device_put(g.cxadj, rep),
+            nnz=jax.device_put(g.nnz, rep))
 
     # -- batching -------------------------------------------------------------
     @staticmethod

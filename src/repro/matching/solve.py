@@ -33,6 +33,7 @@ and the warm-start registry with zero host transfers.
 from __future__ import annotations
 
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -60,12 +61,19 @@ def scatter_min(n: int, index, values):
 # BFS level expansion — the paper's Algorithms 2 (GPUBFS) and 4 (GPUBFS-WR)
 # ---------------------------------------------------------------------------
 def _expand_level(ecol, cadj, bfs, root, pred, rmatch, level, *, wr: bool,
-                  wr_exact: bool, use_pallas: bool, block_edges: int):
+                  wr_exact: bool, use_pallas: bool, block_edges: int,
+                  axis: Optional[str] = None):
     """One level-synchronous frontier expansion. Returns updated state.
 
     Edge-parallel: every edge (c, r) is one lane.  The per-row conflict
     (several frontier columns reaching the same row) is resolved with a
     deterministic min-scatter, standing in for the paper's benign race.
+
+    With ``axis`` set (inside ``shard_map``), ``ecol``/``cadj`` are this
+    device's edge shard and the per-row winners of all shards merge with one
+    ``lax.pmin`` over the mesh axis — the single collective any
+    level-synchronous distributed BFS needs.  Everything after the merge
+    operates on replicated O(n) state and is bit-identical on every device.
     """
     nc = bfs.shape[0] - 1
     nr = pred.shape[0] - 1
@@ -87,6 +95,8 @@ def _expand_level(ecol, cadj, bfs, root, pred, rmatch, level, *, wr: bool,
     # per-row winner: lowest proposing column (deterministic "first writer")
     row_ix = jnp.where(prop < IINF, cadj, nr)
     winner = scatter_min(nr, row_ix, prop)
+    if axis is not None:                                  # merge edge shards
+        winner = jax.lax.pmin(winner, axis)
     upd_r = winner < IINF                                 # (nr+1,) rows reached
 
     pred = jnp.where(upd_r, winner, pred)
@@ -195,13 +205,21 @@ def default_block_edges(nnz_pad: int, schedule: str) -> int:
 # ---------------------------------------------------------------------------
 # Drivers — Algorithm 1 (APsB) and its APFB variant
 # ---------------------------------------------------------------------------
-def make_solver(cfg: MatcherConfig):
+def make_solver(cfg: MatcherConfig, axis: Optional[str] = None):
     """Build the pure matcher ``(ecol, cadj, cmatch, rmatch) ->
     (cmatch, rmatch, phases, fallbacks)``.
 
     Shape-polymorphic: ``nc``/``nr``/``block_edges`` are derived from the
     argument shapes at trace time, so one returned function serves every size
     bucket and closes under ``jit`` and ``vmap``.
+
+    ``axis`` names a mesh axis for the distributed variant: the returned
+    function then expects to run *inside* ``shard_map`` with ``ecol``/``cadj``
+    edge-sharded over that axis and the O(n) state replicated.  The only
+    communication is one ``pmin`` per BFS level in :func:`_expand_level`;
+    ALTERNATE and FIXMATCHING run redundantly-but-identically on the
+    replicated state (their cost is O(n) per phase vs O(nnz/D) for
+    expansion, so sharding them would buy nothing).
     """
     wr = cfg.kernel == "gpubfs_wr"
 
@@ -234,7 +252,7 @@ def make_solver(cfg: MatcherConfig):
                 bfs, root, pred, rmatch, ins, aug_l = _expand_level(
                     ecol, cadj, bfs, root, pred, rmatch, level, wr=wr,
                     wr_exact=cfg.wr_exact, use_pallas=cfg.use_pallas,
-                    block_edges=block_edges)
+                    block_edges=block_edges, axis=axis)
                 aug_lvl = jnp.where(aug_l & (aug_lvl == IINF), level, aug_lvl)
                 return (bfs, root, pred, rmatch, level + 1, ins, aug | aug_l,
                         aug_lvl)

@@ -80,7 +80,7 @@ def hflat_blockwise_attn(q, k, v, qpos, kpos, mask_kind, window, prefix_len,
     einsums so every tensor carries a single head axis that shards H-over-
     model (H=48 splits 16 ways; the grouped (KV=8, G=6) layout cannot, and
     GSPMD falls back to 'involuntary full rematerialization' + fp32 score
-    all-gathers — see EXPERIMENTS.md §Perf dbrx iteration 1)."""
+    all-gathers — see docs/architecture.md, "LM-substrate notes")."""
     B, S, H, hd = q.shape
     KV = k.shape[2]
     G = H // KV

@@ -165,7 +165,7 @@ class ModelConfig:
     fsdp: bool = False
     remat: bool = True
     attn_impl: str = "xla"         # xla | pallas (flash kernel)
-    # --- beyond-baseline performance knobs (EXPERIMENTS.md §Perf) ---------
+    # --- beyond-baseline performance knobs (docs/architecture.md) ---------
     # H-flat attention layout: fold GQA groups into the head axis so score
     # tensors shard cleanly H-over-model (fixes involuntary resharding).
     opt_attn_layout: bool = False

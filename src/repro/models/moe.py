@@ -38,7 +38,8 @@ def init_moe(key, cfg: ModelConfig):
         # §Perf iteration 2b: FSDP on the *non-contracted* dim of w_in and on
         # the h-matching dim of w_out — the default (data on D) makes BOTH
         # expert matmuls partial-sum over the data axis and all-reduce the
-        # (E, C, ·) hidden tensors (2.1 TiB/step for dbrx, see EXPERIMENTS).
+        # (E, C, ·) hidden tensors (2.1 TiB/step for dbrx; see
+        # docs/architecture.md, "LM-substrate notes").
         specs = {
             "router": P(None, None),
             "w_in": P(AX_MODEL, None, AX_DATA) if cfg.fsdp
@@ -94,7 +95,8 @@ def moe_ffn_local_dispatch(params, x, cfg: ModelConfig
 
     The baseline scatters data-sharded tokens straight into a model-sharded
     (E*C, D) buffer; GSPMD lowers that to *full-buffer fp32 all-reduces* per
-    layer (960 GiB/layer-step for dbrx train_4k — EXPERIMENTS.md §Perf).
+    layer (960 GiB/layer-step for dbrx train_4k — docs/architecture.md,
+    "LM-substrate notes").
     Here every data shard routes and scatters LOCALLY into its own
     (E, C_loc, D) slab (no cross-device traffic), and a single bf16
     all-to-all reshards (shards, E, C_loc, D) from data-sharded shards to

@@ -5,7 +5,8 @@ rounding.  With SPMD the all-reduce itself is emitted by XLA from the mean
 over the batch axis; activating compression reduces the *cross-pod* gradient
 traffic 4x by quantize -> (all-reduce in int-as-float) -> dequantize around
 the pod-axis reduction (the data-axis reduction stays bf16; intra-pod ICI is
-cheap, inter-pod links are the scarce resource — see EXPERIMENTS.md §FT).
+cheap, inter-pod links are the scarce resource — see docs/architecture.md,
+"LM-substrate notes").
 """
 from __future__ import annotations
 

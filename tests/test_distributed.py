@@ -1,5 +1,10 @@
-"""Distributed (shard_map) matcher — the paper's future-work algorithm —
-runs in a subprocess with 8 simulated devices."""
+"""ShardedMatcher (shard_map, one pmin per BFS level) on a forced 4-device
+CPU host.
+
+Each scenario runs in a subprocess because the forced device count
+(``XLA_FLAGS=--xla_force_host_platform_device_count=4``) must be set before
+JAX initializes, and the rest of the suite runs single-device.
+"""
 import os
 import subprocess
 import sys
@@ -8,37 +13,102 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-CODE = """
+PRELUDE = """
 import jax, numpy as np
-from repro.core import (MatcherConfig, cheap_matching_jax,
-                        maximum_cardinality, validate_matching)
-from repro.core.distributed import maximum_matching_distributed
+from repro.core import (MatcherConfig, maximum_cardinality, validate_matching)
 from repro.graphs import grid_graph, random_bipartite, scaled_free
+from repro.matching import (DeviceCSR, Matcher, ShardedMatcher,
+                            compile_cache_info)
 
-mesh = jax.make_mesh((8,), ("data",))
+assert jax.device_count() == 4, jax.device_count()
+mesh = jax.make_mesh((4,), ("data",))
 cases = {
     "rand": random_bipartite(500, 500, 4.0, seed=2),
-    "grid": grid_graph(18),
+    "grid": grid_graph(18),                       # adversarial: long paths
     "rect": random_bipartite(300, 450, 3.0, seed=3),
-    "free": scaled_free(400, 400, 5.0, seed=4).permuted(1),
+    "free": scaled_free(400, 400, 5.0, seed=4).permuted(1),  # skewed degrees
 }
+"""
+
+# ShardedMatcher == single-device Matcher.run cardinality (== optimal),
+# across the generator suite, per algo / warm start.
+EQUALITY = PRELUDE + """
 for name, g in cases.items():
     opt = maximum_cardinality(g)
-    cm0, rm0 = cheap_matching_jax(g)
+    graph = DeviceCSR.from_host(g)
+    sharded_g = graph.shard(mesh, "data")
     for algo in ("apfb", "apsb"):
         cfg = MatcherConfig(algo=algo, kernel="gpubfs_wr")
-        cm, rm, st = maximum_matching_distributed(
-            g, mesh, cfg, cmatch0=cm0, rmatch0=rm0)
+        single = Matcher(cfg, warm_start="cheap").run(graph)
+        st = ShardedMatcher(mesh, config=cfg, warm_start="cheap").run(sharded_g)
+        cm, rm = st.to_host()
         card = validate_matching(g, cm, rm)
-        assert card == opt, (name, algo, card, opt)
+        assert card == opt == int(single.cardinality), \\
+            (name, algo, card, opt, int(single.cardinality))
 print("DIST_OK")
 """
 
+# Repeated same-bucket sharded calls must hit the compile cache, and a second
+# mesh axis name / different bucket must miss.
+CACHE = PRELUDE + """
+g = cases["rand"]
+sharded_g = DeviceCSR.from_host(g).shard(mesh, "data")
+m = ShardedMatcher(mesh, config=MatcherConfig(), warm_start="cheap")
+c0 = int(m.run(sharded_g).cardinality)
+info1 = compile_cache_info()
+c1 = int(m.run(sharded_g).cardinality)
+info2 = compile_cache_info()
+assert c0 == c1
+assert info2["misses"] == info1["misses"], (info1, info2)   # no recompile
+assert info2["hits"] == info1["hits"] + 1, (info1, info2)
+g2 = cases["grid"]                                          # other bucket
+m.run(DeviceCSR.from_host(g2).shard(mesh, "data"))
+info3 = compile_cache_info()
+assert info3["misses"] == info2["misses"] + 1, (info2, info3)
+print("DIST_OK")
+"""
 
-def test_distributed_matcher_8dev():
+# The Pallas frontier_expand kernel as the per-shard proposal sweep.
+PALLAS = PRELUDE + """
+g = cases["rand"]
+opt = maximum_cardinality(g)
+sharded_g = DeviceCSR.from_host(g).shard(mesh, "data")
+for schedule in ("ct", "mt"):
+    cfg = MatcherConfig(algo="apfb", kernel="gpubfs_wr", schedule=schedule,
+                        use_pallas=True)
+    st = ShardedMatcher(mesh, config=cfg, warm_start="cheap").run(sharded_g)
+    cm, rm = st.to_host()
+    assert validate_matching(g, cm, rm) == opt, schedule
+print("DIST_OK")
+"""
+
+# The numpy-compat wrapper (old core.distributed surface) and warm-state
+# resume via cmatch0/rmatch0.
+COMPAT = PRELUDE + """
+from repro.core import cheap_matching_jax
+from repro.core.distributed import maximum_matching_distributed
+g = cases["rect"]
+opt = maximum_cardinality(g)
+cm0, rm0 = cheap_matching_jax(g)
+for algo in ("apfb", "apsb"):
+    cfg = MatcherConfig(algo=algo, kernel="gpubfs_wr")
+    cm, rm, st = maximum_matching_distributed(g, mesh, cfg,
+                                              cmatch0=cm0, rmatch0=rm0)
+    assert validate_matching(g, cm, rm) == opt, (algo, st)
+    assert st["devices"] == 4 and st["variant"].startswith("dist-")
+print("DIST_OK")
+"""
+
+SCENARIOS = {"equality": EQUALITY, "cache": CACHE, "pallas": PALLAS,
+             "compat": COMPAT}
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_sharded_matcher_4dev(scenario):
     env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               JAX_PLATFORMS="cpu",
                PYTHONPATH=f"{REPO}/src")
-    r = subprocess.run([sys.executable, "-c", CODE], env=env,
+    r = subprocess.run([sys.executable, "-c", SCENARIOS[scenario]], env=env,
                        capture_output=True, text=True, timeout=580)
     assert "DIST_OK" in r.stdout, r.stderr[-3000:]

@@ -1,7 +1,8 @@
 """CI-scale exercise of the REAL dry-run code path: lower + compile a full
 (reduced-mesh) cell in a subprocess with 16 simulated devices, assert the
 JSON record has sane roofline terms. The production 256/512-chip sweep runs
-via `python -m repro.launch.dryrun --all --both-meshes` (EXPERIMENTS.md)."""
+via `python -m repro.launch.dryrun --all --both-meshes` (docs/architecture.md,
+"LM-substrate notes")."""
 import json
 import os
 import subprocess
