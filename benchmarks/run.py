@@ -10,8 +10,8 @@ import sys
 import time
 
 from . import (batch_matching, fig2_bfs_iters, fig35_speedups, perf_matcher,
-               roofline, sharded_matching, table1_variants, table2_hardest,
-               table_init, table_router)
+               roofline, serving, sharded_matching, table1_variants,
+               table2_hardest, table_init, table_router)
 
 BENCHES = {
     "table1": table1_variants.run,     # paper Table 1
@@ -24,6 +24,7 @@ BENCHES = {
     "roofline": roofline.run,          # roofline table (from dry-run artifacts)
     "batch": batch_matching.run,       # match_many serving throughput
     "sharded": sharded_matching.run,   # ShardedMatcher vs single-device sweep
+    "serving": serving.run,            # MatchingService open-loop load sweep
 }
 
 

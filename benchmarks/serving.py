@@ -1,0 +1,82 @@
+"""Open-loop serving sweep: latency percentiles + occupancy vs offered load.
+
+Replays a Poisson arrival trace of same-family graphs at increasing offered
+rates against a warmed :class:`repro.serving.MatchingService` and reports,
+per load level: p50/p99 end-to-end latency, batch occupancy, device
+dispatches vs the naive 1-dispatch-per-request loop, and the flush-reason
+mix.  The dispatch column is the acceptance check for the scheduler: the
+batched path issues exactly ONE device dispatch per flushed bucket, so
+``dispatches`` must be <= ``requests`` (and shrinks as load grows and
+batches fill).
+
+    PYTHONPATH=src python -m benchmarks.serving [--scale tiny]
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.graphs import random_bipartite
+from repro.matching import MatcherConfig
+from repro.matching.device_csr import bucket_nnz
+from repro.serving import (Bucketizer, MatchingService, SizeBucket,
+                           percentile)
+
+BEST = MatcherConfig(algo="apfb", kernel="gpubfs_wr", schedule="ct")
+
+
+def run(scale: str = "tiny") -> List[str]:
+    n, deg, requests = {"tiny": (192, 3.0, 48),
+                        "small": (1024, 4.0, 128),
+                        "large": (4096, 4.0, 256)}[scale]
+    rates = {"tiny": (100.0, 500.0, 2500.0),
+             "small": (50.0, 250.0, 1000.0),
+             "large": (25.0, 100.0, 400.0)}[scale]
+    v = 1 << max(8, int(np.ceil(np.log2(n))))
+    bucket = SizeBucket(v, v, bucket_nnz(int(v * deg * 2)))
+    pool = [random_bipartite(n, n, deg, seed=s) for s in range(16)]
+    rng = np.random.default_rng(7)
+
+    rows = ["serving.rate_rps,requests,p50_ms,p99_ms,occupancy,dispatches,"
+            "req_per_dispatch,naive_dispatches,full,deadline,drain,"
+            "compile_misses"]
+    for rate in rates:
+        service = MatchingService(bucketizer=Bucketizer((bucket,)),
+                                  config=BEST, warm_start="cheap",
+                                  max_batch=8, max_delay_ms=2.0)
+        service.warm_up()                      # AOT: traffic never compiles
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=requests))
+        t0 = time.perf_counter()
+        futures = []
+        for i in range(requests):
+            lag = t0 + arrivals[i] - time.perf_counter()
+            if lag > 0:
+                time.sleep(lag)
+            futures.append(service.submit(pool[i % len(pool)]))
+        results = [f.result(timeout=300) for f in futures]
+        service.drain()
+        snap = service.metrics.snapshot()
+        service.close()
+        lat = [r.latency_s for r in results]
+        p50 = percentile(lat, 50) * 1e3
+        p99 = percentile(lat, 99) * 1e3
+        dispatches = snap["dispatches"]
+        assert dispatches <= requests, (dispatches, requests)
+        rows.append(
+            f"{rate:g},{requests},{p50:.2f},{p99:.2f},"
+            f"{snap['occupancy']:.2f},{dispatches},"
+            f"{requests / max(1, dispatches):.2f},{requests},"
+            f"{snap['flushes_full']},{snap['flushes_deadline']},"
+            f"{snap['flushes_drain']},{snap['compile_misses']}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="tiny",
+                    choices=["tiny", "small", "large"])
+    print("\n".join(run(ap.parse_args().scale)))

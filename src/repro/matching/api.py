@@ -104,7 +104,10 @@ class Matcher:
 
         def build():
             if cold:
-                return lambda g, s: self.solve(g, self.init(g, s))
+                # _init_pure, not init: going through the public entry inside
+                # this build would register a second ("init") cache entry at
+                # trace time (AOT warmup counts on one program per entry).
+                return lambda g, s: self.solve(g, self._init_pure(g, s))
             return self.solve
 
         return get_compiled(key, build)(graph, state)
@@ -126,7 +129,7 @@ class Matcher:
 
         def build():
             if cold:
-                one = lambda g, s: self.solve(g, self.init(g, s))  # noqa: E731
+                one = lambda g, s: self.solve(g, self._init_pure(g, s))  # noqa: E731
             else:
                 one = self.solve
             return jax.vmap(one)

@@ -6,9 +6,17 @@ be scattered across ``core/matcher.py`` and ``core/cheap.py``.  Centralizing
 it makes compilation observable (:func:`compile_cache_info`), evictable
 (:func:`compile_cache_clear`) and keyed on exactly the things that force a
 recompile: the padded bucket shape and the variant configuration.
+
+The table is guarded by a reentrant lock: the serving layer
+(``repro.serving``) hits it concurrently from its flush thread, AOT warmup,
+and whatever thread calls ``submit``.  Capacity is ``MAX_ENTRIES``,
+overridable with :func:`set_max_entries`; evictions are counted and exposed
+in :func:`compile_cache_info` so a serving deployment can see when its
+declared warmup grid no longer fits the cache.
 """
 from __future__ import annotations
 
+import threading
 from typing import Callable, Dict, Hashable, Tuple
 
 import jax
@@ -18,6 +26,33 @@ MAX_ENTRIES = 256   # parity with the lru_cache maxsize this table replaced
 _CACHE: Dict[Hashable, Callable] = {}
 _HITS = 0
 _MISSES = 0
+_EVICTIONS = 0
+_LOCK = threading.RLock()
+_TLS = threading.local()      # per-thread hit/miss tallies (see below)
+
+
+def _thread_counts() -> dict:
+    counts = getattr(_TLS, "counts", None)
+    if counts is None:
+        counts = _TLS.counts = {"hits": 0, "misses": 0}
+    return counts
+
+
+def set_max_entries(n: int) -> int:
+    """Override the cache capacity; returns the previous value.
+
+    Shrinking below the current population evicts LRU entries immediately
+    (counted as evictions).  A serving deployment sizes this to its warmup
+    grid so warmed programs are never evicted by stray compiles.
+    """
+    global MAX_ENTRIES, _EVICTIONS
+    assert n >= 1, f"cache capacity must be positive, got {n}"
+    with _LOCK:
+        old, MAX_ENTRIES = MAX_ENTRIES, int(n)
+        while len(_CACHE) > MAX_ENTRIES:
+            del _CACHE[next(iter(_CACHE))]
+            _EVICTIONS += 1
+    return old
 
 
 def compile_cache_key(bucket_key: Tuple[int, ...], cfg, warm_start: str,
@@ -29,27 +64,44 @@ def compile_cache_key(bucket_key: Tuple[int, ...], cfg, warm_start: str,
 def get_compiled(key: Hashable, build: Callable[[], Callable],
                  static_argnums=()) -> Callable:
     """Jitted program for ``key``, building (and jitting) it on first use."""
-    global _HITS, _MISSES
-    fn = _CACHE.get(key)
-    if fn is None:
-        _MISSES += 1
-        fn = jax.jit(build(), static_argnums=static_argnums)
-        while len(_CACHE) >= MAX_ENTRIES:        # LRU eviction
-            del _CACHE[next(iter(_CACHE))]
-        _CACHE[key] = fn
-    else:
-        _HITS += 1
-        _CACHE[key] = _CACHE.pop(key)            # move to MRU position
+    global _HITS, _MISSES, _EVICTIONS
+    counts = _thread_counts()
+    with _LOCK:
+        fn = _CACHE.get(key)
+        if fn is None:
+            _MISSES += 1
+            counts["misses"] += 1
+            fn = jax.jit(build(), static_argnums=static_argnums)
+            while len(_CACHE) >= MAX_ENTRIES:        # LRU eviction
+                del _CACHE[next(iter(_CACHE))]
+                _EVICTIONS += 1
+            _CACHE[key] = fn
+        else:
+            _HITS += 1
+            counts["hits"] += 1
+            _CACHE[key] = _CACHE.pop(key)            # move to MRU position
     return fn
 
 
+def compile_cache_thread_info() -> dict:
+    """Hits/misses made by the *calling thread* (since it first touched the
+    cache).  The serving dispatcher reads deltas of this around each flush so
+    concurrent compiles on other threads (warmup, direct Matcher users) are
+    never misattributed to a dispatch."""
+    return dict(_thread_counts())
+
+
 def compile_cache_info() -> dict:
-    return {"entries": len(_CACHE), "hits": _HITS, "misses": _MISSES,
-            "keys": tuple(_CACHE)}
+    with _LOCK:
+        return {"entries": len(_CACHE), "hits": _HITS, "misses": _MISSES,
+                "evictions": _EVICTIONS, "max_entries": MAX_ENTRIES,
+                "keys": tuple(_CACHE)}
 
 
 def compile_cache_clear() -> None:
-    global _HITS, _MISSES
-    _CACHE.clear()
-    _HITS = 0
-    _MISSES = 0
+    global _HITS, _MISSES, _EVICTIONS
+    with _LOCK:
+        _CACHE.clear()
+        _HITS = 0
+        _MISSES = 0
+        _EVICTIONS = 0

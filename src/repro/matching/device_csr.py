@@ -120,6 +120,30 @@ class DeviceCSR:
         """Round the edge capacity up to the canonical power-of-two bucket."""
         return self.pad_to(bucket_nnz(self.nnz_pad, lane))
 
+    def pad_vertices(self, nc: int, nr: int) -> "DeviceCSR":
+        """Grow the vertex counts on device (serving-bucketizer path).
+
+        The extra columns/rows are isolated (no incident edges), so the
+        maximum matching — and every solver trajectory on the real vertices —
+        is unchanged.  Padding edges are re-sentineled (they encoded the old
+        ``nc``/``nr``) and ``cxadj`` is extended with the terminal offset.
+        Changes the static bucket shape, which is the point: the bucketizer
+        maps many true sizes onto one declared compiled bucket.
+        """
+        if (nc, nr) == (self.nc, self.nr):
+            return self
+        assert not self.batch_shape, "pad_vertices() takes a single graph"
+        assert nc >= self.nc and nr >= self.nr, \
+            f"cannot shrink vertex counts {(self.nc, self.nr)} -> {(nc, nr)}"
+        cxadj = self.cxadj
+        if nc > self.nc:
+            cxadj = jnp.concatenate(
+                [cxadj, jnp.broadcast_to(cxadj[-1:], (nc - self.nc,))])
+        cadj = jnp.where(self.cadj == self.nr, jnp.int32(nr), self.cadj)
+        ecol = jnp.where(self.ecol == self.nc, jnp.int32(nc), self.ecol)
+        return dataclasses.replace(self, cxadj=cxadj, cadj=cadj, ecol=ecol,
+                                   nc=nc, nr=nr)
+
     # -- multi-device sharding ------------------------------------------------
     def shard(self, mesh, axis: str = "data") -> "DeviceCSR":
         """Edge-partition the graph over one mesh axis (for ShardedMatcher).

@@ -1,0 +1,34 @@
+"""``repro.serving`` — the online matching service over ``repro.matching``.
+
+The paper's claim is that GPU matching wins once per-call overhead is
+amortized and the solve stays device-resident; this package is the layer
+that realizes it under live traffic: requests are admitted onto declared
+size buckets (:mod:`bucketizer`), micro-batched per (bucket, config, warm
+start) with adaptive targets and deadline flushes (:mod:`scheduler`),
+dispatched as ONE ``match_many`` call per flush (:mod:`service`), with the
+whole (bucket x config x warm-start x batch) grid compiled ahead of time
+(:mod:`warmup`) and everything observable (:mod:`metrics`)::
+
+    submit() ─► Bucketizer ─► MicroBatcher ─► stack + match_many ─► Future
+                   │ oversize                        (1 dispatch/flush)
+                   └─────────► ShardedMatcher lane
+
+``python -m repro.launch.serve_matching`` replays a synthetic open-loop
+traffic trace against this service; ``benchmarks/serving.py`` sweeps offered
+load; ``docs/architecture.md`` ("The serving layer") documents the design.
+"""
+from .bucketizer import (Admission, Bucketizer, OversizeGraphError,
+                         SizeBucket, ladder)
+from .metrics import ServiceMetrics, percentile
+from .scheduler import Flush, MicroBatcher, batch_bucket, batch_ladder
+from .service import (MatchingService, MatchResult, ServiceClosedError)
+from .warmup import (WarmupGrid, WarmupReport, synthetic_bucket_graph,
+                     warm_up)
+
+__all__ = [
+    "Admission", "Bucketizer", "OversizeGraphError", "SizeBucket", "ladder",
+    "ServiceMetrics", "percentile",
+    "Flush", "MicroBatcher", "batch_bucket", "batch_ladder",
+    "MatchingService", "MatchResult", "ServiceClosedError",
+    "WarmupGrid", "WarmupReport", "synthetic_bucket_graph", "warm_up",
+]

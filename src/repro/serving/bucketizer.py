@@ -1,0 +1,175 @@
+"""Admission control: map raw incoming graphs onto declared size buckets.
+
+A serving deployment cannot afford one compiled program per arriving shape —
+every novel ``(nc, nr, nnz_pad)`` would pay a trace+compile on the request
+path and eventually thrash the compile cache.  The bucketizer declares a
+finite grid of :class:`SizeBucket` shapes up front (the same grid the AOT
+warmup in :mod:`repro.serving.warmup` compiles), places each incoming graph
+in the smallest declared bucket that fits — padding vertices
+(:meth:`DeviceCSR.pad_vertices`) and edges with inert sentinels — and
+accounts the padding waste per admission.  Graphs that fit no bucket are
+either routed to the edge-sharded :class:`~repro.matching.ShardedMatcher`
+lane (``oversize="shard"``) or rejected with the typed
+:class:`OversizeGraphError` (``oversize="reject"``), so the caller can
+distinguish admission failure from solver failure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.csr import BipartiteCSR
+from repro.matching.device_csr import LANE, DeviceCSR, bucket_nnz
+
+
+class OversizeGraphError(ValueError):
+    """Typed admission rejection: the graph fits no declared bucket."""
+
+    def __init__(self, nc: int, nr: int, nnz: int, largest: "SizeBucket"):
+        self.nc, self.nr, self.nnz = nc, nr, nnz
+        self.largest = largest
+        super().__init__(
+            f"graph ({nc}x{nr}, {nnz} edges) fits no declared bucket; "
+            f"largest is ({largest.nc}x{largest.nr}, {largest.nnz_pad} edge "
+            f"slots) — enlarge the ladder or serve with oversize='shard'")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class SizeBucket:
+    """One declared compiled shape: (nc, nr, edge capacity)."""
+
+    nc: int
+    nr: int
+    nnz_pad: int
+
+    def fits(self, nc: int, nr: int, nnz: int) -> bool:
+        return nc <= self.nc and nr <= self.nr and nnz <= self.nnz_pad
+
+    @property
+    def cost(self) -> int:
+        """Padded footprint in int32 words — the order buckets are tried in."""
+        return 2 * self.nnz_pad + self.nc + self.nr
+
+    @property
+    def key(self) -> Tuple[int, int, int]:
+        return (self.nc, self.nr, self.nnz_pad)
+
+
+def ladder(max_vertices: int = 4096, min_vertices: int = 256,
+           edge_factor: int = 8, lane: int = LANE) -> Tuple[SizeBucket, ...]:
+    """Geometric default grid: square ``(v, v)`` buckets, doubling ``v`` from
+    ``min_vertices`` to ``max_vertices``, each holding ``v * edge_factor``
+    edges (rounded to the canonical power-of-two capacity)."""
+    assert min_vertices <= max_vertices, (min_vertices, max_vertices)
+    out, v = [], min_vertices
+    while v <= max_vertices:
+        out.append(SizeBucket(v, v, bucket_nnz(v * edge_factor, lane)))
+        v *= 2
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class Admission:
+    """One admitted request: the bucket-shaped device graph + accounting."""
+
+    graph: DeviceCSR
+    bucket: Optional[SizeBucket]      # None on the sharded route
+    route: str                        # "bucket" | "sharded"
+    nc: int                           # true sizes of the submitted graph
+    nr: int
+    nnz: int
+
+    @property
+    def pad_edges(self) -> int:
+        """Wasted edge slots this admission pays for."""
+        return self.graph.nnz_pad - self.nnz
+
+    @property
+    def pad_vertex_slots(self) -> int:
+        """Wasted vertex slots (isolated padding columns + rows)."""
+        return (self.graph.nc - self.nc) + (self.graph.nr - self.nr)
+
+
+def _pad_host_vertices(g: BipartiteCSR, nc: int, nr: int,
+                       nnz_pad: int) -> BipartiteCSR:
+    """Host-side vertex+edge padding in one rebuild (extra columns have an
+    empty CSR segment; sentinels take the new ``nc``/``nr``)."""
+    cxadj = g.cxadj
+    if nc > g.nc:
+        cxadj = np.concatenate(
+            [cxadj, np.full(nc - g.nc, g.nnz, np.int32)])
+    return BipartiteCSR.from_csr(cxadj, g.cadj[: g.nnz], nc, nr,
+                                 pad_to=nnz_pad)
+
+
+class Bucketizer:
+    """Maps raw graphs onto the declared bucket grid (or the sharded lane).
+
+    ``buckets`` default to :func:`ladder`.  ``oversize`` selects the policy
+    for graphs that fit no bucket: ``"reject"`` raises
+    :class:`OversizeGraphError`; ``"shard"`` admits them with
+    ``route="sharded"`` for the service to hand to ``ShardedMatcher``.
+    """
+
+    def __init__(self, buckets: Optional[Sequence[SizeBucket]] = None,
+                 oversize: str = "reject"):
+        assert oversize in ("reject", "shard"), oversize
+        bs = tuple(sorted(buckets if buckets is not None else ladder(),
+                          key=lambda b: b.cost))
+        assert bs, "need at least one declared bucket"
+        self.buckets = bs
+        self.oversize = oversize
+
+    def bucket_for(self, nc: int, nr: int, nnz: int) -> Optional[SizeBucket]:
+        """Smallest (by padded footprint) declared bucket that fits."""
+        for b in self.buckets:
+            if b.fits(nc, nr, nnz):
+                return b
+        return None
+
+    def admit(self, graph: Union[BipartiteCSR, DeviceCSR]) -> Admission:
+        """Place ``graph`` in a bucket (pad + upload) or route/reject it.
+
+        Accepts the host container or an already-uploaded ``DeviceCSR``
+        (whose true ``nnz`` costs one scalar sync at admission — the padded
+        edges must sit at the array tail, as every constructor here lays
+        them out).
+        """
+        if isinstance(graph, BipartiteCSR):
+            nc, nr, nnz = graph.nc, graph.nr, graph.nnz
+        elif isinstance(graph, DeviceCSR):
+            assert not graph.batch_shape, "admit() takes a single graph"
+            nc, nr, nnz = graph.nc, graph.nr, int(graph.nnz)
+        else:
+            raise TypeError(
+                f"admit() takes BipartiteCSR or DeviceCSR, got {type(graph)}"
+                " — build edge lists with Bucketizer.from_edges")
+        b = self.bucket_for(nc, nr, nnz)
+        if b is None:
+            if self.oversize == "reject":
+                raise OversizeGraphError(nc, nr, nnz, self.buckets[-1])
+            dev = (graph if isinstance(graph, DeviceCSR)
+                   else DeviceCSR.from_host(graph)).bucketed()
+            return Admission(graph=dev, bucket=None, route="sharded",
+                             nc=nc, nr=nr, nnz=nnz)
+        if isinstance(graph, BipartiteCSR):
+            dev = DeviceCSR.from_host(
+                _pad_host_vertices(graph, b.nc, b.nr, b.nnz_pad))
+        else:
+            dev = graph.pad_vertices(b.nc, b.nr)
+            if dev.nnz_pad > b.nnz_pad:      # over-padded upload: trim tail
+                dev = dataclasses.replace(dev,
+                                          cadj=dev.cadj[: b.nnz_pad],
+                                          ecol=dev.ecol[: b.nnz_pad])
+            else:
+                dev = dev.pad_to(b.nnz_pad)
+        return Admission(graph=dev, bucket=b, route="bucket",
+                         nc=nc, nr=nr, nnz=nnz)
+
+    @staticmethod
+    def from_edges(cols, rows, nc: int, nr: int) -> BipartiteCSR:
+        """Convenience for raw edge-list requests (dedups, builds CSR)."""
+        return BipartiteCSR.from_edges(np.asarray(cols), np.asarray(rows),
+                                       nc, nr)

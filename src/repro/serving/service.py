@@ -1,0 +1,324 @@
+"""``MatchingService``: the online facade over the device-resident matcher.
+
+Request path::
+
+    submit(graph) ── Bucketizer.admit ──► per-(bucket, config, warm-start)
+        │                                 queue in the MicroBatcher
+        └─► Future[MatchResult]                 │ full / deadline / drain
+                                                ▼
+                        flush thread: DeviceCSR.stack + ONE
+                        Matcher.run_many dispatch per flush,
+                        then per-request MatchState slicing
+
+``submit`` is non-blocking and returns a ``concurrent.futures.Future``; a
+single background thread owns every device dispatch (batched buckets and the
+oversize sharded lane), so callers never contend on the accelerator.  Flushed
+batches are padded to the :func:`batch_ladder` rung with copies of the first
+graph (inert lanes, results discarded) so the compile cache sees only the
+batch shapes AOT warmup declared.  ``drain()`` flushes everything queued and
+blocks until every accepted request resolved; ``close()`` drains and stops
+the thread (also via the context-manager protocol).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Tuple, Union
+
+import jax
+
+from repro.core.csr import BipartiteCSR
+from repro.matching import (DeviceCSR, Matcher, MatcherConfig, MatchState,
+                            MatchStats, ShardedMatcher)
+from repro.matching.cache import compile_cache_thread_info
+
+from .bucketizer import (Admission, Bucketizer, OversizeGraphError,
+                         SizeBucket)
+from .metrics import ServiceMetrics
+from .scheduler import Flush, MicroBatcher, batch_bucket
+
+
+class ServiceClosedError(RuntimeError):
+    """submit() after close(): the flush thread is gone."""
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchResult:
+    """One resolved request: the sliced device state + serving accounting."""
+
+    state: MatchState                 # bucket-shaped (padded) matching state
+    stats: MatchStats
+    bucket: Optional[SizeBucket]      # None on the sharded route
+    route: str                        # "bucket" | "sharded"
+    nc: int                           # true submitted sizes
+    nr: int
+    batch_size: int                   # real requests in the flush served with
+    queue_wait_s: float
+    latency_s: float
+
+    @property
+    def cardinality(self) -> int:
+        """Matched pairs (host sync; padding vertices are isolated, so this
+        equals the true graph's maximum matching cardinality)."""
+        return int(self.stats.cardinality)
+
+    def matching(self):
+        """(cmatch, rmatch) as true-size numpy arrays (bucket padding cut)."""
+        cm, rm = self.state.to_host()
+        return cm[: self.nc], rm[: self.nr]
+
+
+@dataclasses.dataclass
+class _Request:
+    admission: Admission
+    config: MatcherConfig
+    warm_start: str
+    future: Future
+    submitted_at: float
+
+
+class MatchingService:
+    """Accepts concurrent matching requests, serves them micro-batched.
+
+    >>> svc = MatchingService(bucketizer=Bucketizer(buckets), max_batch=8)
+    >>> svc.warm_up()                        # AOT: first dispatch = cache hit
+    >>> fut = svc.submit(host_graph)         # non-blocking
+    >>> fut.result().cardinality
+    """
+
+    def __init__(self, bucketizer: Optional[Bucketizer] = None,
+                 config: MatcherConfig = MatcherConfig(),
+                 warm_start: str = "cheap",
+                 max_batch: int = 8, max_delay_ms: float = 2.0,
+                 mesh=None, shard_axis: str = "data",
+                 adaptive: bool = True,
+                 metrics: Optional[ServiceMetrics] = None):
+        if bucketizer is None:
+            bucketizer = Bucketizer(
+                oversize="shard" if mesh is not None else "reject")
+        assert bucketizer.oversize != "shard" or mesh is not None, \
+            "oversize='shard' needs a mesh to shard over"
+        self.bucketizer = bucketizer
+        self.config = config
+        self.warm_start = warm_start
+        self.mesh = mesh
+        self.shard_axis = shard_axis
+        self.metrics = metrics if metrics is not None else ServiceMetrics()
+        self._batcher = MicroBatcher(max_batch=max_batch,
+                                     max_delay_s=max_delay_ms / 1e3,
+                                     adaptive=adaptive)
+        self._matchers: Dict[Tuple[MatcherConfig, str], Matcher] = {}
+        self._sharded: Dict[Tuple[MatcherConfig, str], ShardedMatcher] = {}
+        self._cond = threading.Condition()
+        self._ready: List[Flush] = []
+        self._sharded_q: List[_Request] = []
+        self._inflight = 0
+        self._stop = False
+        self._thread = threading.Thread(
+            target=self._loop, name="matching-service-flush", daemon=True)
+        self._thread.start()
+
+    # -- matcher registry (shared with warmup so cache keys line up) ---------
+    @property
+    def max_batch(self) -> int:
+        return self._batcher.max_batch
+
+    def matcher(self, config: Optional[MatcherConfig] = None,
+                warm_start: Optional[str] = None) -> Matcher:
+        cfg = config if config is not None else self.config
+        ws = warm_start if warm_start is not None else self.warm_start
+        key = (cfg, ws)
+        m = self._matchers.get(key)
+        if m is None:
+            m = self._matchers[key] = Matcher(cfg, ws)
+        return m
+
+    def warm_up(self, grid=None):
+        """AOT-compile the declared grid (see :mod:`repro.serving.warmup`)."""
+        from .warmup import warm_up
+        return warm_up(self, grid)
+
+    # -- request intake -------------------------------------------------------
+    def submit(self, graph: Union[BipartiteCSR, DeviceCSR], *,
+               config: Optional[MatcherConfig] = None,
+               warm_start: Optional[str] = None) -> Future:
+        """Admit ``graph`` and enqueue it; returns a Future[MatchResult].
+
+        Raises :class:`OversizeGraphError` synchronously when the graph fits
+        no declared bucket and the bucketizer's policy is ``"reject"``;
+        raises :class:`ServiceClosedError` after :meth:`close`.
+        """
+        cfg = config if config is not None else self.config
+        ws = warm_start if warm_start is not None else self.warm_start
+        self.matcher(cfg, ws)      # fail fast here, not on the flush thread
+        try:
+            adm = self.bucketizer.admit(graph)
+        except OversizeGraphError:
+            self.metrics.record_reject()
+            raise
+        fut: Future = Future()
+        req = _Request(admission=adm, config=cfg, warm_start=ws,
+                       future=fut, submitted_at=time.perf_counter())
+        with self._cond:
+            if self._stop:
+                raise ServiceClosedError("submit() on a closed service")
+            self.metrics.record_submit(adm.nnz, adm.graph.nnz_pad)
+            if adm.route == "sharded":
+                self._sharded_q.append(req)
+            else:
+                flush = self._batcher.add((adm.bucket, cfg, ws), req,
+                                          req.submitted_at)
+                if flush is not None:
+                    self._ready.append(flush)
+            self._cond.notify_all()
+        return fut
+
+    # -- lifecycle ------------------------------------------------------------
+    def flush(self) -> None:
+        """Force-flush every queued request now (non-blocking)."""
+        with self._cond:
+            self._ready.extend(self._batcher.drain())
+            self._cond.notify_all()
+
+    def drain(self) -> None:
+        """Flush everything and block until all accepted requests resolved."""
+        with self._cond:
+            self._ready.extend(self._batcher.drain())
+            self._cond.notify_all()
+            while (self._ready or self._sharded_q or self._inflight
+                   or self._batcher.pending):
+                self._cond.wait(0.01)
+                self._ready.extend(self._batcher.drain())
+
+    def close(self) -> None:
+        """Graceful shutdown: drain, then stop the flush thread."""
+        with self._cond:
+            if self._stop:
+                return
+            self._stop = True
+            self._ready.extend(self._batcher.drain())
+            self._cond.notify_all()
+        self._thread.join(timeout=120)
+
+    def __enter__(self) -> "MatchingService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- the flush thread -----------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                while True:
+                    now = time.perf_counter()
+                    self._ready.extend(self._batcher.due(now))
+                    if self._ready or self._sharded_q:
+                        break
+                    if self._stop:
+                        if self._batcher.pending:
+                            self._ready.extend(self._batcher.drain())
+                            continue
+                        return
+                    deadline = self._batcher.next_deadline()
+                    timeout = (None if deadline is None
+                               else max(0.0, deadline - now))
+                    self._cond.wait(timeout)
+                ready, self._ready = self._ready, []
+                sharded, self._sharded_q = self._sharded_q, []
+                self._inflight += len(ready) + len(sharded)
+            try:
+                # per-item guards: an exception must resolve the affected
+                # futures, never kill the flush thread (which would strand
+                # every later request)
+                for flush in ready:
+                    try:
+                        self._dispatch(flush)
+                    except Exception as e:
+                        self._fail([q.payload for q in flush.items], e)
+                for req in sharded:
+                    try:
+                        self._dispatch_sharded(req)
+                    except Exception as e:
+                        self._fail([req], e)
+            finally:
+                with self._cond:
+                    self._inflight -= len(ready) + len(sharded)
+                    self._cond.notify_all()
+
+    def _fail(self, reqs: List[_Request], exc: BaseException) -> None:
+        """Resolve still-pending futures with ``exc`` (dispatch escaped)."""
+        undone = [r for r in reqs if not r.future.done()]
+        self.metrics.record_failed(len(undone))
+        for r in undone:
+            r.future.set_exception(exc)
+
+    def _dispatch(self, flush: Flush) -> None:
+        """ONE device dispatch for a flushed bucket: stack + run_many."""
+        bucket, cfg, ws = flush.key
+        # claim the futures: once RUNNING a caller-side cancel() can no
+        # longer race our set_result; already-cancelled requests drop out
+        reqs: List[_Request] = [q.payload for q in flush.items
+                                if q.payload.future.set_running_or_notify_cancel()]
+        if not reqs:
+            return
+        t0 = time.perf_counter()
+        graphs = [r.admission.graph for r in reqs]
+        padded = batch_bucket(len(graphs), self._batcher.max_batch)
+        graphs = graphs + [graphs[0]] * (padded - len(graphs))  # inert lanes
+        info0 = compile_cache_thread_info()
+        try:
+            batch = DeviceCSR.stack(graphs)
+            out = self.matcher(cfg, ws).run_many(batch)
+            jax.block_until_ready(out.cmatch)
+        except Exception as e:
+            self.metrics.record_failed(len(reqs))
+            for r in reqs:
+                r.future.set_exception(e)
+            return
+        done = time.perf_counter()
+        info1 = compile_cache_thread_info()
+        self.metrics.record_flush(
+            flush.reason, real=len(reqs), padded=padded,
+            hits=info1["hits"] - info0["hits"],
+            misses=info1["misses"] - info0["misses"])
+        for i, r in enumerate(reqs):
+            state = jax.tree.map(lambda x: x[i], out)
+            qw = t0 - r.submitted_at
+            lat = done - r.submitted_at
+            self.metrics.record_done(qw, lat)
+            r.future.set_result(MatchResult(
+                state=state, stats=MatchStats.of(state, cfg.name),
+                bucket=bucket, route="bucket",
+                nc=r.admission.nc, nr=r.admission.nr,
+                batch_size=len(reqs), queue_wait_s=qw, latency_s=lat))
+
+    def _dispatch_sharded(self, req: _Request) -> None:
+        """Oversize lane: one edge-partitioned ShardedMatcher run."""
+        if not req.future.set_running_or_notify_cancel():
+            return                                 # cancelled while queued
+        t0 = time.perf_counter()
+        key = (req.config, req.warm_start)
+        m = self._sharded.get(key)
+        if m is None:
+            m = self._sharded[key] = ShardedMatcher(
+                self.mesh, self.shard_axis, req.config, req.warm_start)
+        try:
+            graph = req.admission.graph.shard(self.mesh, self.shard_axis)
+            out = m.run(graph)
+            jax.block_until_ready(out.cmatch)
+        except Exception as e:
+            self.metrics.record_failed()
+            req.future.set_exception(e)
+            return
+        done = time.perf_counter()
+        qw = t0 - req.submitted_at
+        lat = done - req.submitted_at
+        self.metrics.record_sharded()
+        self.metrics.record_done(qw, lat)
+        req.future.set_result(MatchResult(
+            state=out, stats=m.stats(out), bucket=None, route="sharded",
+            nc=req.admission.nc, nr=req.admission.nr,
+            batch_size=1, queue_wait_s=qw, latency_s=lat))

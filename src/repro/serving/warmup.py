@@ -1,0 +1,106 @@
+"""Ahead-of-time warmup: compile the declared (bucket x config x warm-start
+x batch) grid before traffic arrives.
+
+The scheduler's batched dispatch hits the compile cache with the key
+``((batch, nc, nr, nnz_pad), config, (warm start, version), "run_many")``.
+Warming exactly that grid — every declared :class:`SizeBucket`, every served
+config/warm-start pair, every :func:`batch_ladder` rung — means the first
+real request on a warmed bucket *never* pays a trace or compile: its
+dispatch is a pure cache hit (asserted in ``tests/test_serving.py``).
+
+Warmup drives each program with a synthetic *empty* graph of the bucket's
+exact shape: all edges are inert sentinels, so the solver terminates after
+one phase, but the traced program is byte-identical to the one real members
+of the bucket will use (shapes are all that matter to the cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.matching import MatcherConfig
+from repro.matching.cache import compile_cache_thread_info
+from repro.matching.device_csr import DeviceCSR
+
+from .bucketizer import SizeBucket
+from .scheduler import batch_ladder
+
+
+def synthetic_bucket_graph(bucket: SizeBucket) -> DeviceCSR:
+    """An empty (all-sentinel-edges) graph of exactly the bucket's shape.
+
+    Solves in O(1) phases yet forces the same compiled program as any real
+    member of the bucket.
+    """
+    return DeviceCSR(
+        cxadj=jnp.zeros(bucket.nc + 1, jnp.int32),
+        cadj=jnp.full(bucket.nnz_pad, bucket.nr, jnp.int32),
+        ecol=jnp.full(bucket.nnz_pad, bucket.nc, jnp.int32),
+        nnz=jnp.int32(0), nc=bucket.nc, nr=bucket.nr)
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmupGrid:
+    """The declared serving surface to compile ahead of time."""
+
+    buckets: Tuple[SizeBucket, ...]
+    configs: Tuple[MatcherConfig, ...]
+    warm_starts: Tuple[str, ...]
+    batch_sizes: Tuple[int, ...]
+
+    def cells(self):
+        return itertools.product(self.buckets, self.configs,
+                                 self.warm_starts, self.batch_sizes)
+
+    def __len__(self) -> int:
+        return (len(self.buckets) * len(self.configs)
+                * len(self.warm_starts) * len(self.batch_sizes))
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmupReport:
+    cells: int          # grid cells driven
+    compiled: int       # programs actually built (cache misses)
+    already: int        # cells that were already resident (cache hits)
+    seconds: float
+
+    def __str__(self) -> str:
+        return (f"warmup: {self.cells} cells, {self.compiled} compiled, "
+                f"{self.already} already resident, {self.seconds:.2f}s")
+
+
+def warm_up(service, grid: Optional[WarmupGrid] = None) -> WarmupReport:
+    """Drive every grid cell through the service's matchers.
+
+    With ``grid=None`` the grid is derived from the service's declared
+    surface: its bucketizer's buckets, its default config and warm start, and
+    the batch ladder up to its ``max_batch``.  Blocks until every program has
+    finished its (trivial) solve, i.e. until compilation is done.
+    """
+    if grid is None:
+        grid = WarmupGrid(buckets=tuple(service.bucketizer.buckets),
+                          configs=(service.config,),
+                          warm_starts=(service.warm_start,),
+                          batch_sizes=batch_ladder(service.max_batch))
+    t0 = time.perf_counter()
+    # per-thread deltas: warmup compiles on the calling thread, so another
+    # thread's compiles (a flush, a second service warming) can't skew the
+    # report
+    info0 = compile_cache_thread_info()
+    outs, cells = [], 0
+    for bucket, cfg, ws, bs in grid.cells():
+        g = synthetic_bucket_graph(bucket)
+        batch = DeviceCSR.stack([g] * bs)
+        outs.append(service.matcher(cfg, ws).run_many(batch).cmatch)
+        cells += 1
+    jax.block_until_ready(outs)
+    info1 = compile_cache_thread_info()
+    compiled = info1["misses"] - info0["misses"]
+    return WarmupReport(cells=cells, compiled=compiled,
+                        already=cells - compiled,
+                        seconds=time.perf_counter() - t0)
