@@ -1,0 +1,84 @@
+"""§Autotune the fused frontier kernel's ``block_edges`` per size bucket.
+
+The paper's MT/CT thread-geometry knob became the edge-tile size on TPU
+(``default_block_edges``: CT 4096 / MT 512).  This sweep times ONE fused
+level sweep per candidate tile on each canonical edge bucket and reports the
+argmin; apply a winner via ``MatcherConfig(pallas_block_edges=...)``.
+
+    python -m benchmarks.autotune [tiny|small|large] [--json PATH]
+
+``--json`` records ``{nnz_pad: best_block_edges}`` (plus host metadata) so a
+deployment can pin its tuned geometry next to its serving config.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+import jax
+
+from repro.graphs import random_bipartite
+from repro.kernels.frontier_expand import (frontier_expand_fused,
+                                           resolve_interpret)
+from .common import time_call
+from .perf_smoke import _sweep_state
+
+_BUCKETS = {          # nnz_pad -> (nc, avg_deg) of the probe graph
+    "tiny": [(2048, (512, 3.0))],
+    "small": [(4096, (1024, 3.0)), (16384, (4096, 3.5))],
+    "large": [(16384, (4096, 3.5)), (65536, (16384, 3.5)),
+              (262144, (65536, 3.5))],
+}
+_CANDIDATES = (256, 512, 1024, 2048, 4096, 8192)
+
+
+def run(scale: str = "tiny") -> List[str]:
+    backend = jax.default_backend()
+    interpret = resolve_interpret(None)
+    rows = ["autotune,backend,nnz_pad,block_edges,ms,best"]
+    best = {}
+    for nnz_pad, (nc, deg) in _BUCKETS[scale]:
+        g = random_bipartite(nc, nc, deg, seed=nc, pad_to=nnz_pad)
+        ecol, cadj, bfs, root, rmj = _sweep_state(g)
+        timed = []
+        for blk in _CANDIDATES:
+            if blk > nnz_pad:
+                continue
+            fn = lambda: jax.block_until_ready(frontier_expand_fused(
+                ecol, cadj, bfs, root, rmj, 2, block_edges=blk,
+                interpret=interpret))
+            fn()                                   # compile (not timed)
+            timed.append((time_call(fn, repeat=3), blk))
+        t_best, blk_best = min(timed)
+        best[nnz_pad] = blk_best
+        for t, blk in timed:
+            rows.append(f"autotune,{backend},{nnz_pad},{blk},{t*1e3:.3f},"
+                        f"{'*' if blk == blk_best else ''}")
+    rows.append("# autotune.best," + ",".join(
+        f"{k}:{v}" for k, v in sorted(best.items())))
+    return rows
+
+
+def main() -> None:
+    args = sys.argv[1:]
+    scale = args[0] if args and not args[0].startswith("--") else "tiny"
+    rows = run(scale)
+    print("\n".join(rows))
+    if "--json" in args:
+        path = args[args.index("--json") + 1]
+        table = {}
+        for r in rows:
+            parts = r.split(",")
+            if parts[0] == "autotune" and parts[-1] == "*":
+                table[int(parts[2])] = int(parts[3])
+        payload = {"schema": "repro-autotune/1",
+                   "backend": jax.default_backend(), "scale": scale,
+                   "block_edges": table}
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -49,14 +49,15 @@ def instrumented_phases(g, algo: str, max_phases: int = 10_000):
             break
         card0 = _cardinality(cmatch)
         mask = rmatch == -2
-        cm1, rm1 = _alternate(cmatch, rmatch, pred,
-                              mask, jnp.int32(2 * (min(nc, nr) + 2)))
+        cm1, rm1, _ = _alternate(cmatch, rmatch, pred,
+                                 mask, jnp.int32(2 * (min(nc, nr) + 2)))
         cm1, rm1 = _fix_matching(cm1, rm1)
         if int(_cardinality(cm1)) <= int(card0):
             first = jnp.argmax(mask)
             one = jnp.zeros(nr + 1, bool).at[first].set(jnp.any(mask))
-            cm1, rm1 = _alternate(cmatch, jnp.where(mask, -1, rmatch), pred,
-                                  one, jnp.int32(2 * (min(nc, nr) + 2)))
+            cm1, rm1, _ = _alternate(cmatch, jnp.where(mask, -1, rmatch),
+                                     pred, one,
+                                     jnp.int32(2 * (min(nc, nr) + 2)))
             cm1, rm1 = _fix_matching(cm1, rm1)
         cmatch, rmatch = cm1, rm1
     return levels_per_phase

@@ -1,0 +1,156 @@
+"""§Perf-smoke: the level-sweep microbench + solve bench behind the repo's
+committed perf baseline (``BENCH_PR4.json``).
+
+Every row carries a machine-portable ``rel`` ratio (path time over the jnp
+path's time on the same input) so the CI regression gate compares relative
+numbers rather than absolute wall-clock across hosts; the gate reads the
+``sweep_summary`` (geomean over graphs) and ``solve`` sets — per-graph
+sub-millisecond detail rows are for humans, too noisy to gate on.  Row sets:
+
+* ``perf_smoke.sweep`` — ONE BFS level of frontier expansion (the O(nnz) hot
+  loop of Figs. 2-5) through each winner path: ``jnp`` (proposals + XLA
+  scatter), ``pallas_legacy`` (proposal kernel + XLA scatter) and
+  ``pallas_fused`` (in-kernel winner merge).  On CPU hosts the Pallas paths
+  run through the interpreter (``mode=interpret``); on accelerator backends
+  the same rows carry ``mode=compiled`` — the fused compiled path is the
+  one the paper's speedup story rests on.
+* ``perf_smoke.solve`` — full ``Matcher.run`` geomeans per sweep config
+  (includes the beyond-paper ``adaptive_frontier`` dispatch).
+
+Run directly, or through the harness + regression gate:
+
+    python -m benchmarks.run --only perf_smoke --scale tiny \
+        --json BENCH_PR4.json --baseline BENCH_PR4.json
+"""
+from __future__ import annotations
+
+import functools
+import sys
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MatcherConfig, cheap_matching_jax
+from repro.graphs import random_bipartite, scaled_free
+from repro.kernels.frontier_expand import (frontier_expand,
+                                           frontier_expand_fused,
+                                           frontier_expand_fused_ref,
+                                           resolve_interpret)
+from repro.matching.solve import (IINF, default_block_edges, level0_state,
+                                  scatter_min)
+from .common import geomean, time_call, time_matcher
+
+_SCALES = {
+    "tiny": [("rand", lambda: random_bipartite(512, 512, 3.0, seed=1)),
+             ("free", lambda: scaled_free(512, 512, 4.0, seed=2))],
+    "small": [("rand", lambda: random_bipartite(4096, 4096, 4.0, seed=1)),
+              ("free", lambda: scaled_free(4096, 4096, 6.0, seed=2))],
+    "large": [("rand", lambda: random_bipartite(20000, 20000, 4.0, seed=1)),
+              ("free", lambda: scaled_free(20000, 20000, 6.0, seed=2))],
+}
+
+
+def _sweep_state(g):
+    """Level-L0 BFS state from the cheap matching — built by the solver's
+    own ``level0_state`` init so the probe cannot drift from what the
+    solver actually sweeps."""
+    cm, rm = cheap_matching_jax(g)
+    cmj = jnp.concatenate([jnp.asarray(cm), jnp.array([-3], jnp.int32)])
+    rmj = jnp.concatenate([jnp.asarray(rm), jnp.array([-3], jnp.int32)])
+    bfs, root = level0_state(cmj)
+    return jnp.asarray(g.ecol), jnp.asarray(g.cadj), bfs, root, rmj
+
+
+# the rel denominator: the SAME proposals + per-row min-merge oracle the
+# kernels are tested against, jitted — reimplementing the formula here
+# would let the committed baseline drift from the solver's real jnp path
+_jnp_winner = jax.jit(frontier_expand_fused_ref)
+
+
+def _sweep_paths(interpret: bool):
+    """path name -> winner fn(ecol, cadj, bfs, root, rmj, blk).
+
+    Each path is ONE jitted dispatch (the legacy kernel + its XLA merge are
+    jitted together), so rel ratios measure the sweeps, not eager-dispatch
+    overhead one competitor happens to pay.
+    """
+    @functools.partial(jax.jit, static_argnames=("blk",))
+    def legacy(ecol, cadj, bfs, root, rmj, *, blk):
+        nr = rmj.shape[0] - 1
+        prop = frontier_expand(ecol, cadj, bfs, root, rmj, 2,
+                               block_edges=blk, interpret=interpret)
+        return scatter_min(nr, jnp.where(prop < IINF, cadj, nr), prop)
+
+    @functools.partial(jax.jit, static_argnames=("blk",))
+    def fused(ecol, cadj, bfs, root, rmj, *, blk):
+        return frontier_expand_fused(ecol, cadj, bfs, root, rmj, 2,
+                                     block_edges=blk, interpret=interpret)
+
+    return {"pallas_legacy": legacy, "pallas_fused": fused}
+
+
+def run(scale: str = "tiny") -> List[str]:
+    backend = jax.default_backend()
+    interpret = resolve_interpret(None)
+    mode = "interpret" if interpret else "compiled"
+    rows = ["perf_smoke.sweep,backend,mode,graph,path,block_edges,ms,rel"]
+    reps = 20                       # sweeps per timed call: sub-ms kernels
+    rels = {}                       # would make the rel gate flaky
+    for gname, build in _SCALES[scale]:
+        g = build()
+        ecol, cadj, bfs, root, rmj = _sweep_state(g)
+        blk = default_block_edges(int(ecol.shape[0]), "ct")
+
+        def timed(fn):
+            fn()                    # compile (not timed)
+            def many():
+                for _ in range(reps):
+                    out = fn()
+                jax.block_until_ready(out)
+            return time_call(many, repeat=5) / reps
+
+        base = timed(lambda: _jnp_winner(ecol, cadj, bfs, root, rmj,
+                                         jnp.int32(2)))
+        rows.append(f"perf_smoke.sweep,{backend},xla,{gname},jnp,-,"
+                    f"{base*1e3:.3f},1.000")
+        for pname, fn in _sweep_paths(interpret).items():
+            t = timed(lambda: fn(ecol, cadj, bfs, root, rmj, blk=blk))
+            rows.append(f"perf_smoke.sweep,{backend},{mode},{gname},{pname},"
+                        f"{blk},{t*1e3:.3f},{t/base:.3f}")
+            rels.setdefault(pname, []).append(t / base)
+
+    # the gate rows: geomean over graphs is far less noisy than any one
+    # sub-ms measurement (benchmarks/run.py GATED_SETS)
+    rows.append("perf_smoke.sweep_summary,backend,mode,path,rel")
+    for pname, rs in rels.items():
+        rows.append(f"perf_smoke.sweep_summary,{backend},{mode},{pname},"
+                    f"{geomean(rs):.3f}")
+
+    rows.append("perf_smoke.solve,backend,mode,config,geomean_ms,rel")
+    solve_cases = [
+        ("jnp", MatcherConfig(algo="apfb", kernel="gpubfs_wr")),
+        ("pallas_fused", MatcherConfig(algo="apfb", kernel="gpubfs_wr",
+                                       use_pallas=True)),
+        ("pallas_legacy", MatcherConfig(algo="apfb", kernel="gpubfs_wr",
+                                        use_pallas=True, pallas_fused=False)),
+        ("adaptive", MatcherConfig(algo="apfb", kernel="gpubfs_wr",
+                                   adaptive_frontier=True)),
+    ]
+    insts = [(n, b()) for n, b in _SCALES[scale]]
+    prepared = [(n, g, *cheap_matching_jax(g)) for n, g in insts]
+    base_ms = None
+    for cname, cfg in solve_cases:
+        times = [time_matcher(g, cfg, cm0, rm0, repeat=3)[0]
+                 for _, g, cm0, rm0 in prepared]
+        ms = geomean(times) * 1e3
+        if base_ms is None:
+            base_ms = ms
+        m = "xla" if not cfg.use_pallas else mode
+        rows.append(f"perf_smoke.solve,{backend},{m},{cname},{ms:.2f},"
+                    f"{ms/base_ms:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run(sys.argv[1] if len(sys.argv) > 1 else "tiny")))

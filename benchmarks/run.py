@@ -2,16 +2,26 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--scale tiny|small|large]
 [--only table1,...]``  prints ``name,...`` CSV rows per bench.
+
+``--json PATH`` additionally records every bench's rows (plus backend/scale
+metadata) as a JSON artifact — the schema behind the committed perf baseline
+``BENCH_PR4.json``.  With ``--baseline BASE`` (and BASE present on disk) the
+run becomes a perf gate: for the benches in :data:`REGRESSION_BENCHES` each
+row's machine-portable ``rel`` column is compared against the baseline row
+with the same identity, and the harness exits non-zero on a
+>``--tolerance`` (default 20%) regression.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
-from . import (batch_matching, fig2_bfs_iters, fig35_speedups, perf_matcher,
-               roofline, serving, sharded_matching, table1_variants,
-               table2_hardest, table_init, table_router)
+from . import (autotune, batch_matching, fig2_bfs_iters, fig35_speedups,
+               perf_matcher, perf_smoke, roofline, serving, sharded_matching,
+               table1_variants, table2_hardest, table_init, table_router)
 
 BENCHES = {
     "table1": table1_variants.run,     # paper Table 1
@@ -21,11 +31,96 @@ BENCHES = {
     "router": table_router.run,        # framework integration (DESIGN §4)
     "init": table_init.run,            # KS vs cheap init (beyond-paper)
     "perf_matcher": perf_matcher.run,  # matcher hillclimb (docs/architecture.md)
+    "perf_smoke": perf_smoke.run,      # level-sweep microbench (perf gate)
+    "autotune": autotune.run,          # fused-kernel block_edges sweep
     "roofline": roofline.run,          # roofline table (from dry-run artifacts)
     "batch": batch_matching.run,       # match_many serving throughput
     "sharded": sharded_matching.run,   # ShardedMatcher vs single-device sweep
     "serving": serving.run,            # MatchingService open-loop load sweep
 }
+
+# row sets that feed the --baseline regression gate.  Gated rows must carry
+# a `rel` column: time relative to the same-host jnp path, portable across
+# machine speeds (absolute ms would flake on slower runners) — and only the
+# aggregated sets are gated; per-graph sub-ms detail rows are too noisy.
+REGRESSION_BENCHES = ("perf_smoke",)
+GATED_SETS = ("perf_smoke.sweep_summary", "perf_smoke.solve")
+
+SCHEMA = "repro-bench/1"
+
+
+def _records(rows):
+    """Bench rows -> (set_name, record) pairs.
+
+    A bench may emit several CSV sections, each opened by its own header
+    line (``set_name,col,...``); a header is any row whose trailing field is
+    not numeric.  Comment rows (``# ...``) are skipped.
+    """
+    out = []
+    header = None
+    for row in rows:
+        if row.startswith("#"):
+            continue
+        parts = row.split(",")
+        try:
+            float(parts[-1])
+        except ValueError:
+            header = parts
+            continue
+        if header is None or len(parts) != len(header):
+            continue
+        out.append((header[0], dict(zip(header[1:], parts[1:]))))
+    return out
+
+
+def _rel_index(payload, bench):
+    """{row identity -> rel} over the gated sets of one bench's rows."""
+    out = {}
+    for set_name, rec in _records(payload.get("benches", {}).get(bench, [])):
+        if set_name not in GATED_SETS or "rel" not in rec:
+            continue
+        key = (set_name,) + tuple(sorted(
+            (k, v) for k, v in rec.items()
+            if k not in ("ms", "geomean_ms", "rel")))
+        try:
+            out[key] = float(rec["rel"])
+        except ValueError:
+            continue
+    return out
+
+
+def check_regressions(baseline: dict, payload: dict, tolerance: float):
+    """Gated rows regressed by more than ``tolerance`` vs the baseline.
+
+    A baseline with gated rows that matches NOTHING in the new run is itself
+    a failure — renamed paths/configs (or a backend change) would otherwise
+    turn the gate vacuous and CI silently green.
+    """
+    failures = []
+    for bench in REGRESSION_BENCHES:
+        old = _rel_index(baseline, bench)
+        new = _rel_index(payload, bench)
+        matched = old.keys() & new.keys()
+        if old and not matched:
+            failures.append(
+                f"{bench}: 0 of {len(old)} baseline row identities match "
+                f"this run (renamed sets/paths, dropped rel column, or "
+                f"backend drift?) — refresh the baseline artifact instead "
+                f"of letting the gate go vacuous")
+            continue
+        for key in sorted(old.keys() - new.keys()):
+            # a vanished row could hide an unbounded regression on that path
+            failures.append(
+                f"{bench}: baseline row {key[0]} {dict(key[1:])} missing "
+                f"from this run — renamed/removed paths need a baseline "
+                f"refresh, not a silently narrower gate")
+        for key in matched:
+            if new[key] > old[key] * (1.0 + tolerance):
+                failures.append(
+                    f"{bench}: {key[0]} {dict(key[1:])} rel "
+                    f"{old[key]:.3f} -> {new[key]:.3f} "
+                    f"(> {tolerance:.0%} regression)")
+    return failures
 
 
 def main() -> None:
@@ -33,15 +128,24 @@ def main() -> None:
     ap.add_argument("--scale", default="tiny",
                     choices=["tiny", "small", "large"])
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="",
+                    help="write the run's rows as a JSON artifact")
+    ap.add_argument("--baseline", default="",
+                    help="prior --json artifact to gate regressions against "
+                         "(skipped when the file does not exist)")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed rel-slowdown before the gate fails")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(BENCHES)
     failures = 0
+    results = {}
     for name, fn in BENCHES.items():
         if name not in only:
             continue
         t0 = time.time()
         try:
             rows = fn(args.scale)
+            results[name] = rows
             print("\n".join(rows), flush=True)
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception as e:  # keep the harness going; report at exit
@@ -49,6 +153,31 @@ def main() -> None:
             traceback.print_exc()
             print(f"# {name} FAILED: {e}", flush=True)
             failures += 1
+
+    if args.json or args.baseline:      # the gate must not no-op without --json
+        import jax
+        payload = {"schema": SCHEMA, "backend": jax.default_backend(),
+                   "scale": args.scale, "benches": results}
+        regressions = []
+        if args.baseline and os.path.exists(args.baseline):
+            with open(args.baseline) as f:
+                baseline = json.load(f)
+            regressions = check_regressions(baseline, payload,
+                                            args.tolerance)
+        elif args.baseline:
+            # absence is allowed (bootstrap) but must never be silent: a
+            # deleted/renamed baseline would otherwise green-light CI with
+            # the gate quietly doing nothing
+            print(f"# BASELINE MISSING: {args.baseline} not found — "
+                  f"regression gate SKIPPED, commit a baseline artifact "
+                  f"to arm it", flush=True)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            print(f"# wrote {args.json}", flush=True)
+        for r in regressions:
+            print(f"# REGRESSION {r}", flush=True)
+        failures += len(regressions)
     sys.exit(1 if failures else 0)
 
 

@@ -1,4 +1,7 @@
-from .ops import frontier_expand
-from .ref import frontier_expand_ref
+from .frontier_expand import LANE
+from .ops import (frontier_expand, frontier_expand_fused, resolve_interpret)
+from .ref import frontier_expand_fused_ref, frontier_expand_ref
 
-__all__ = ["frontier_expand", "frontier_expand_ref"]
+__all__ = ["LANE", "frontier_expand", "frontier_expand_fused",
+           "frontier_expand_ref", "frontier_expand_fused_ref",
+           "resolve_interpret"]

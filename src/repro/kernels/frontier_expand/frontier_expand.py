@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: edge-tiled BFS frontier expansion (paper Alg. 2/4).
+"""Pallas TPU kernels: edge-tiled BFS frontier expansion (paper Alg. 2/4).
 
 TPU adaptation of the paper's GPUBFS / GPUBFS-WR CUDA kernels
 --------------------------------------------------------------
@@ -19,21 +19,52 @@ On TPU the analogous structure is:
   coarse-grained strided batches correspond to large tiles (4096 lanes),
   MT's fine-grained one-vertex-per-thread to small tiles (512).
 
-The kernel emits per-edge column proposals (IINF = no proposal); the
-deterministic per-row min-merge happens outside (shared with the jnp path),
-because scatters with data-dependent indices do not vectorize on the VPU,
-whereas the proposal sweep is the dominant O(nnz)-per-level cost.
+Two kernel families share one proposal formula (:func:`_proposals`):
 
-VMEM budget (defaults): 3 state vectors of (n+1) int32 + 3 edge tiles of
-``block_edges`` int32 = 4*(3n + 3*4096) bytes ~= 12n B + 48 KiB; for n = 1M
-that is ~12 MiB, inside the 16 MiB v5e VMEM; larger graphs partition the
-edges over the mesh (repro.matching.ShardedMatcher) and each shard tiles its
-own slice.  (This budget math is also walked through in
-docs/architecture.md, "The Pallas frontier kernel".)
+* :func:`frontier_expand` (legacy) emits the per-edge column proposals
+  (IINF = no proposal) as an (nnz,) array; the deterministic per-row
+  min-merge then runs as a separate XLA scatter outside the kernel.
+* :func:`frontier_expand_fused` keeps a ``(nr+1,)`` winner accumulator
+  resident in VMEM across the whole edge-tile grid (the output block maps to
+  the same slot for every grid step, so sequential grid revision carries it)
+  and min-merges each tile's proposals into it *inside* the kernel.  The
+  (nnz,) proposal array and its HBM round-trip disappear: the kernel's only
+  output is the per-row winner vector the solver actually needs, and it is
+  bit-identical to ``scatter_min`` of the legacy proposals (min is the merge
+  in both, so tile order cannot matter).
+
+  The tradeoff moved, it did not vanish: a data-dependent scatter still
+  does not vectorize lane-parallel on the VPU, but the fused kernel pays it
+  against VMEM instead of paying an (nnz,) HBM write + a second O(nnz) XLA
+  scatter pass over HBM — per level the streamed traffic drops from ~3·nnz
+  int32 plus the merge pass to 2·nnz in, (nr+1) out.  Compiled-TPU lowering
+  of the in-kernel scatter is exercised by the compiled-parity tests
+  (tests/test_frontier_paths.py), which run on accelerator hosts only; if
+  Mosaic ever regresses on this shape the loud failure is there, and
+  ``MatcherConfig(pallas_fused=False)`` restores the two-step path.
+
+Edge geometry: callers may pass any ``block_edges >= 1``; the wrappers pad
+the edge arrays up to the next tile multiple with inert sentinel edges
+(``ecol = nc`` points at the NEG bfs slot so the lane never proposes,
+``cadj = nr`` lands in the winner slot that is reset to IINF), replacing the
+old hard ``nnz % block_edges == 0`` requirement.
+
+``interpret=None`` auto-detects: compile for real on accelerator backends,
+fall back to the Pallas interpreter only where there is no Mosaic/Triton
+compiler (CPU).
+
+VMEM budget (fused, WR, defaults): 3 state vectors of (nc+1) int32 + the
+(nr+1) winner accumulator + 2 edge tiles of ``block_edges`` int32 =
+4*(3*nc + nr + 2*4096) bytes ~= 16n B + 32 KiB for square graphs; n = 800k
+fits the 16 MiB v5e VMEM.  Larger graphs partition the edges over the mesh
+(repro.matching.ShardedMatcher) and each shard tiles its own slice.  (This
+budget math is also walked through in docs/architecture.md, "The Pallas
+frontier kernel".)
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,71 +72,207 @@ from jax.experimental import pallas as pl
 
 UNVISITED = 1          # python ints: safe to close over in kernels
 IINF = 2**30
+LANE = 128             # TPU lane width; the floor for any edge tile
 
 
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` = auto: interpret only where Pallas cannot compile (CPU)."""
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return bool(interpret)
+
+
+def check_edge_geometry(nnz: int, block_edges: int) -> None:
+    """Trace-time validation of the edge-tile geometry.
+
+    Raises a typed :class:`ValueError` naming the offending shapes (the old
+    code bare-asserted ``nnz % block_edges == 0`` inside a jitted wrapper,
+    which surfaced as an anonymous tuple).  Divisibility itself is no longer
+    required — the wrappers pad — but the tile size must be positive.
+    """
+    if block_edges < 1:
+        raise ValueError(
+            "frontier_expand: block_edges must be a positive tile size, got "
+            f"block_edges={block_edges} for nnz={nnz}")
+
+
+def _pad_edges(ecol, cadj, block_edges: int, nc: int, nr: int):
+    """Pad the edge arrays up to a multiple of ``block_edges`` with inert
+    sentinel edges (``ecol=nc`` -> NEG bfs slot, never active; ``cadj=nr`` ->
+    the winner slot that is reset to IINF)."""
+    nnz = ecol.shape[0]
+    pad = -(-nnz // block_edges) * block_edges
+    if pad != nnz:
+        ecol = jnp.concatenate(
+            [ecol, jnp.full(pad - nnz, jnp.int32(nc))])
+        cadj = jnp.concatenate(
+            [cadj, jnp.full(pad - nnz, jnp.int32(nr))])
+    return ecol, cadj
+
+
+def _proposals(level, ecol, cadj, bfs, root, rmatch):
+    """Per-edge proposal mask (paper Alg. 2 l.6-8 / Alg. 4 l.4-10).
+
+    ``root=None`` selects the plain (non-WR) formula.  Shared by both kernel
+    families and their jnp reference oracles.
+    """
+    nc = bfs.shape[0] - 1
+    active = jnp.take(bfs, ecol, axis=0) == level
+    if root is not None:
+        # WR early-exit (Alg. 4 lines 4-7)
+        myroot = jnp.take(root, ecol, axis=0)
+        active &= jnp.take(bfs, myroot, axis=0) >= UNVISITED
+    # row -> matched column lookup (Alg. 4 lines 9-10)
+    cm = jnp.take(rmatch, cadj, axis=0)
+    col_unvis = jnp.take(bfs, jnp.clip(cm, 0, nc), axis=0) == UNVISITED
+    return active & ((cm >= 0) & col_unvis | (cm == -1))
+
+
+# ---------------------------------------------------------------------------
+# Legacy kernels: per-edge proposals, merge outside
+# ---------------------------------------------------------------------------
 def _kernel_wr(level_ref, ecol_ref, cadj_ref, bfs_ref, root_ref, rmatch_ref,
                out_ref):
-    level = level_ref[0]
     ecol = ecol_ref[...]
-    cadj = cadj_ref[...]
-    bfs = bfs_ref[...]
-    nc = bfs.shape[0] - 1
-    # frontier check + WR early-exit (Alg. 4 lines 4-7)
-    col_level = jnp.take(bfs, ecol, axis=0)
-    active = col_level == level
-    myroot = jnp.take(root_ref[...], ecol, axis=0)
-    active &= jnp.take(bfs, myroot, axis=0) >= UNVISITED
-    # row -> matched column lookup (Alg. 4 lines 9-10)
-    cm = jnp.take(rmatch_ref[...], cadj, axis=0)
-    col_unvis = jnp.take(bfs, jnp.clip(cm, 0, nc), axis=0) == UNVISITED
-    target = active & ((cm >= 0) & col_unvis | (cm == -1))
+    target = _proposals(level_ref[0], ecol, cadj_ref[...], bfs_ref[...],
+                        root_ref[...], rmatch_ref[...])
     out_ref[...] = jnp.where(target, ecol, jnp.int32(IINF))
 
 
 def _kernel_plain(level_ref, ecol_ref, cadj_ref, bfs_ref, rmatch_ref, out_ref):
-    level = level_ref[0]
     ecol = ecol_ref[...]
-    cadj = cadj_ref[...]
-    bfs = bfs_ref[...]
-    nc = bfs.shape[0] - 1
-    col_level = jnp.take(bfs, ecol, axis=0)
-    active = col_level == level
-    cm = jnp.take(rmatch_ref[...], cadj, axis=0)
-    col_unvis = jnp.take(bfs, jnp.clip(cm, 0, nc), axis=0) == UNVISITED
-    target = active & ((cm >= 0) & col_unvis | (cm == -1))
+    target = _proposals(level_ref[0], ecol, cadj_ref[...], bfs_ref[...],
+                        None, rmatch_ref[...])
     out_ref[...] = jnp.where(target, ecol, jnp.int32(IINF))
 
 
-@functools.partial(jax.jit, static_argnames=("block_edges", "interpret"))
-def frontier_expand(ecol, cadj, bfs, root, rmatch, level, *,
-                    block_edges: int = 4096, interpret: bool = True):
-    """Per-edge frontier proposals; ``root=None`` selects the plain kernel."""
+# ---------------------------------------------------------------------------
+# Fused kernels: per-row winner accumulator carried across the grid
+# ---------------------------------------------------------------------------
+def _merge_tile(target, ecol, cadj, win_ref):
+    """Tile-local min-merge into the VMEM-resident winner accumulator.
+
+    The accumulator block is revisited by every grid step (index map is
+    constant), so it stays in VMEM for the whole sweep; the TPU grid is
+    sequential, making read-modify-write across steps well defined.
+    """
+    nr = win_ref.shape[0] - 1
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        win_ref[...] = jnp.full(win_ref.shape, IINF, jnp.int32)
+
+    prop = jnp.where(target, ecol, jnp.int32(IINF))
+    rows = jnp.where(target, cadj, jnp.int32(nr))
+    win_ref[...] = win_ref[...].at[rows].min(prop)
+
+    @pl.when(pl.program_id(0) == pl.num_programs(0) - 1)
+    def _seal():
+        # the sentinel slot absorbed every non-proposal; never a winner
+        win_ref[...] = win_ref[...].at[nr].set(jnp.int32(IINF))
+
+
+def _kernel_fused_wr(level_ref, ecol_ref, cadj_ref, bfs_ref, root_ref,
+                     rmatch_ref, win_ref):
+    ecol, cadj = ecol_ref[...], cadj_ref[...]
+    target = _proposals(level_ref[0], ecol, cadj, bfs_ref[...],
+                        root_ref[...], rmatch_ref[...])
+    _merge_tile(target, ecol, cadj, win_ref)
+
+
+def _kernel_fused_plain(level_ref, ecol_ref, cadj_ref, bfs_ref, rmatch_ref,
+                        win_ref):
+    ecol, cadj = ecol_ref[...], cadj_ref[...]
+    target = _proposals(level_ref[0], ecol, cadj, bfs_ref[...],
+                        None, rmatch_ref[...])
+    _merge_tile(target, ecol, cadj, win_ref)
+
+
+# ---------------------------------------------------------------------------
+# Public wrappers
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit,
+                   static_argnames=("block_edges", "interpret", "fused"))
+def _sweep_impl(ecol, cadj, bfs, root, rmatch, level, *, block_edges: int,
+                interpret: bool, fused: bool):
+    """One pallas_call builder for both kernel families.
+
+    The edge padding, grid, and every input spec are identical; the
+    families differ only in kernel body and output contract (edge-tiled
+    (nnz,) proposals vs the carried (nr+1,) winner accumulator).
+    """
     nnz = ecol.shape[0]
-    assert nnz % block_edges == 0, (nnz, block_edges)
-    grid = (nnz // block_edges,)
+    nc = bfs.shape[0] - 1
+    nr = rmatch.shape[0] - 1
+    ecol_p, cadj_p = _pad_edges(ecol, cadj, block_edges, nc, nr)
+    grid = (ecol_p.shape[0] // block_edges,)
     level_arr = jnp.asarray(level, jnp.int32).reshape(1)
 
     edge_spec = pl.BlockSpec((block_edges,), lambda i: (i,))
-    state_spec = pl.BlockSpec(bfs.shape, lambda i: (0,))  # replicated per tile
-    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    def rep(arr):                       # replicated per tile (VMEM-resident)
+        return pl.BlockSpec(arr.shape, lambda i: (0,))
 
+    in_specs = [pl.BlockSpec((1,), lambda i: (0,)), edge_spec, edge_spec,
+                rep(bfs)]
+    args = [level_arr, ecol_p, cadj_p, bfs]
     if root is not None:
-        return pl.pallas_call(
-            _kernel_wr,
-            grid=grid,
-            in_specs=[scalar_spec, edge_spec, edge_spec, state_spec,
-                      pl.BlockSpec(root.shape, lambda i: (0,)),
-                      pl.BlockSpec(rmatch.shape, lambda i: (0,))],
-            out_specs=edge_spec,
-            out_shape=jax.ShapeDtypeStruct((nnz,), jnp.int32),
-            interpret=interpret,
-        )(level_arr, ecol, cadj, bfs, root, rmatch)
-    return pl.pallas_call(
-        _kernel_plain,
-        grid=grid,
-        in_specs=[scalar_spec, edge_spec, edge_spec, state_spec,
-                  pl.BlockSpec(rmatch.shape, lambda i: (0,))],
-        out_specs=edge_spec,
-        out_shape=jax.ShapeDtypeStruct((nnz,), jnp.int32),
-        interpret=interpret,
-    )(level_arr, ecol, cadj, bfs, rmatch)
+        in_specs.append(rep(root))
+        args.append(root)
+    in_specs.append(rep(rmatch))
+    args.append(rmatch)
+
+    if fused:
+        kernel = _kernel_fused_wr if root is not None else _kernel_fused_plain
+        out_specs = pl.BlockSpec((nr + 1,), lambda i: (0,))  # carried acc
+        out_shape = jax.ShapeDtypeStruct((nr + 1,), jnp.int32)
+    else:
+        kernel = _kernel_wr if root is not None else _kernel_plain
+        out_specs = edge_spec
+        out_shape = jax.ShapeDtypeStruct(ecol_p.shape, jnp.int32)
+    out = pl.pallas_call(kernel, grid=grid, in_specs=in_specs,
+                         out_specs=out_specs, out_shape=out_shape,
+                         interpret=interpret)(*args)
+    return out if fused else out[:nnz]
+
+
+def frontier_expand(ecol, cadj, bfs, root, rmatch, level, *,
+                    block_edges: int = 4096,
+                    interpret: Optional[bool] = None):
+    """Per-edge frontier proposals (legacy two-step path).
+
+    ``root=None`` selects the plain kernel; ``interpret=None`` auto-detects
+    from the backend.  The per-row merge is the caller's scatter.
+    """
+    check_edge_geometry(int(ecol.shape[0]), block_edges)
+    return _sweep_impl(ecol, cadj, bfs, root, rmatch, level,
+                       block_edges=block_edges,
+                       interpret=resolve_interpret(interpret), fused=False)
+
+
+def frontier_expand_fused(ecol, cadj, bfs, root, rmatch, level, *,
+                          block_edges: int = 4096,
+                          interpret: Optional[bool] = None):
+    """Fused frontier sweep: per-row winners, merged inside the kernel.
+
+    Returns the ``(nr+1,)`` int32 winner vector (lowest proposing column per
+    row, IINF = unreached; slot ``nr`` is the IINF sentinel) — bit-identical
+    to ``scatter_min`` over :func:`frontier_expand` proposals, with no
+    (nnz,) intermediate.
+
+    The carried accumulator relies on the grid executing *sequentially*
+    (TPU, and the interpreter); on a parallel-grid backend (GPU/Triton) the
+    read-modify-write across blocks would race, so there the same contract
+    is kept by composing the legacy proposal kernel with an XLA min-scatter.
+    """
+    check_edge_geometry(int(ecol.shape[0]), block_edges)
+    interp = resolve_interpret(interpret)
+    if not interp and jax.default_backend() != "tpu":
+        nr = rmatch.shape[0] - 1
+        prop = _sweep_impl(ecol, cadj, bfs, root, rmatch, level,
+                           block_edges=block_edges, interpret=False,
+                           fused=False)
+        rows = jnp.where(prop < IINF, cadj, jnp.int32(nr))
+        win = jnp.full(nr + 1, IINF, jnp.int32).at[rows].min(prop)
+        return win.at[nr].set(jnp.int32(IINF))
+    return _sweep_impl(ecol, cadj, bfs, root, rmatch, level,
+                       block_edges=block_edges, interpret=interp, fused=True)

@@ -1,6 +1,13 @@
-"""Jitted public wrapper for the frontier-expansion kernel."""
+"""Public wrappers for the frontier-expansion kernels.
+
+``frontier_expand``       — legacy per-edge proposal sweep (merge outside).
+``frontier_expand_fused`` — fused sweep + in-kernel per-row winner merge.
+``resolve_interpret``     — the backend-based interpret auto-detection shared
+                            with ``repro.matching`` (interpret only on CPU).
+"""
 from __future__ import annotations
 
-from .frontier_expand import frontier_expand
+from .frontier_expand import (frontier_expand, frontier_expand_fused,
+                              resolve_interpret)
 
-__all__ = ["frontier_expand"]
+__all__ = ["frontier_expand", "frontier_expand_fused", "resolve_interpret"]

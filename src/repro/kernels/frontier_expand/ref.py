@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the frontier-expansion kernel.
+"""Pure-jnp oracles for the frontier-expansion kernels.
 
 Semantics (one BFS level of the paper's Alg. 2 / Alg. 4, proposal half):
 for every edge e = (c, r):
@@ -7,9 +7,11 @@ for every edge e = (c, r):
                          or rmatch[r] == -1 )
   out[e]  = c if propose else IINF
 
-The scatter/merge half (min per row) is shared, deterministic jnp in the
-matcher; the kernel covers the gather-heavy proposal sweep, which is the
-memory-bound hot loop the paper tunes with its MT/CT thread geometry.
+:func:`frontier_expand_ref` is that proposal sweep alone (the legacy kernel
+contract); :func:`frontier_expand_fused_ref` composes it with the
+deterministic per-row min-merge ("first writer wins" = lowest proposing
+column), which is the fused kernel's contract: a ``(nr+1,)`` winner vector
+with IINF in every unreached row and in the trailing sentinel slot.
 """
 from __future__ import annotations
 
@@ -28,3 +30,12 @@ def frontier_expand_ref(ecol, cadj, bfs, root, rmatch, level):
     col_unvis = bfs[jnp.clip(cm, 0, nc)] == UNVISITED
     target = active & ((cm >= 0) & col_unvis | (cm == -1))
     return jnp.where(target, ecol, IINF)
+
+
+def frontier_expand_fused_ref(ecol, cadj, bfs, root, rmatch, level):
+    """Proposals + per-row min-merge: the fused kernel's oracle."""
+    nr = rmatch.shape[0] - 1
+    prop = frontier_expand_ref(ecol, cadj, bfs, root, rmatch, level)
+    rows = jnp.where(prop < IINF, cadj, jnp.int32(nr))
+    win = jnp.full(nr + 1, IINF, jnp.int32).at[rows].min(prop)
+    return win.at[nr].set(IINF)

@@ -33,7 +33,10 @@ class Matcher:
 
     def __init__(self, config: MatcherConfig = MatcherConfig(),
                  warm_start: str = "none"):
-        self.config = config
+        # canonical(): the pallas_interpret=None auto marker resolves to the
+        # backend's concrete compilation mode here, so every compile-cache
+        # key built from self.config carries the real interpret bool.
+        self.config = config.canonical()
         self.warm_start = warm_start
         get_warm_start(warm_start)      # fail fast on unknown names
 
@@ -70,8 +73,9 @@ class Matcher:
     def solve(self, graph: DeviceCSR, state: MatchState) -> MatchState:
         """Run the solver from ``state`` (pure; no warm start applied)."""
         self._check_state(graph, state)
+        cxadj = graph.cxadj if self.config.adaptive_frontier else None
         cm, rm, phases, fb = make_solver(self.config)(
-            graph.ecol, graph.cadj, state.cmatch, state.rmatch)
+            graph.ecol, graph.cadj, state.cmatch, state.rmatch, cxadj=cxadj)
         return MatchState(cmatch=cm, rmatch=rm,
                           phases=state.phases + phases,
                           fallbacks=state.fallbacks + fb)
@@ -119,6 +123,13 @@ class Matcher:
         One ``vmap``-compiled program solves the whole batch per dispatch —
         the serving path for many concurrent matching requests.
         """
+        if self.config.adaptive_frontier:
+            # vmap turns the per-level lax.cond into a select: every graph
+            # would run BOTH the dense and the compact sweep each level — a
+            # strict pessimization, so refuse rather than quietly regress.
+            raise ValueError(
+                "adaptive_frontier composes with per-graph run() only; "
+                "under run_many's vmap both sweeps would execute each level")
         assert graphs.batch_shape, "run_many expects a stacked DeviceCSR"
         cold = states is None
         if cold:

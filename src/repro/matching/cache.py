@@ -57,7 +57,17 @@ def set_max_entries(n: int) -> int:
 
 def compile_cache_key(bucket_key: Tuple[int, ...], cfg, warm_start: str,
                       entry: str) -> Hashable:
-    """Canonical key: (bucket shape, config, warm start, entry point)."""
+    """Canonical key: (bucket shape, config, warm start, entry point).
+
+    ``cfg`` must be the *canonical* MatcherConfig (``MatcherConfig.
+    canonical()`` — ``Matcher.__init__`` applies it): the Pallas
+    ``pallas_interpret=None`` auto marker is resolved to the backend's
+    concrete compilation mode first, so a program compiled in interpret mode
+    can never be served where a compiled kernel was requested (and the other
+    way around), and every execution-path knob (``use_pallas``,
+    ``pallas_fused``, ``pallas_block_edges``, ``adaptive_frontier``, ...)
+    lands in the key by being part of the frozen dataclass.
+    """
     return (bucket_key, cfg, warm_start, entry)
 
 

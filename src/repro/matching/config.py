@@ -2,11 +2,19 @@
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
 class MatcherConfig:
-    """One of the paper's eight variants (2 algos x 2 BFS kernels x 2 schedules)."""
+    """One of the paper's eight variants (2 algos x 2 BFS kernels x 2
+    schedules), plus the frontier-sweep execution knobs.
+
+    The sweep knobs (``use_pallas`` .. ``compact_dmax``) select *how* the
+    O(nnz) per-level frontier expansion runs; they never change the matching
+    the solver returns — every path is bit-identical to the deterministic
+    min-merge semantics (asserted in tests/test_frontier_paths.py).
+    """
 
     algo: str = "apfb"          # "apfb" (HKDW-like) | "apsb" (HK-like)
     kernel: str = "gpubfs_wr"   # "gpubfs" | "gpubfs_wr"
@@ -19,6 +27,30 @@ class MatcherConfig:
     # frontier); k>0 on APFB = expand at most k more levels — interpolates
     # between the paper's two drivers (benchmarks/perf_matcher.py).
     tail_levels: int = 0
+    # -- Pallas frontier-sweep geometry -------------------------------------
+    # fused kernel (in-VMEM per-row winner merge, no (nnz,) proposal array);
+    # False = legacy two-step path (proposal kernel + XLA scatter), kept for
+    # benchmarking the fusion win (benchmarks/perf_smoke.py).
+    pallas_fused: bool = True
+    # None = auto: compile for real on accelerator backends, interpret only
+    # on CPU.  Resolved once per Matcher (``canonical()``) so the concrete
+    # bool — not the auto marker — lands in the compile-cache key.
+    pallas_interpret: Optional[bool] = None
+    # 0 = auto (default_block_edges: CT 4096 / MT 512, clamped to the padded
+    # edge count); >0 = explicit tile size, e.g. from benchmarks/autotune.py.
+    pallas_block_edges: int = 0
+    # -- beyond-paper: frontier-adaptive dispatch (default off) -------------
+    # Track the frontier size each level and switch to a compact
+    # column-gather sweep (O(cap * dmax) instead of O(nnz)) whenever the
+    # frontier fits `compact_cap` columns of degree <= `compact_dmax`;
+    # falls back to the full sweep at runtime otherwise, so results stay
+    # bit-identical.  0 = auto-size to the bucket (cap = nc/8 clamped to
+    # [64, 1024], dmax = 8) so the compact sweep stays well under the dense
+    # O(nnz) cost.  Single-device only (the sharded path keeps the dense
+    # per-shard sweep + one pmin).
+    adaptive_frontier: bool = False
+    compact_cap: int = 0
+    compact_dmax: int = 0
 
     def __post_init__(self):
         assert self.algo in ("apfb", "apsb")
@@ -26,11 +58,24 @@ class MatcherConfig:
         assert self.schedule in ("ct", "mt")
         if self.wr_exact:
             assert self.kernel == "gpubfs_wr"
+        assert self.pallas_block_edges >= 0, self.pallas_block_edges
+        assert self.compact_cap >= 0 and self.compact_dmax >= 0, \
+            (self.compact_cap, self.compact_dmax)
 
     @property
     def name(self) -> str:
         s = f"{self.algo}-{self.kernel}-{self.schedule}"
         return s + ("-exact" if self.wr_exact else "")
+
+    def canonical(self) -> "MatcherConfig":
+        """Resolve the ``pallas_interpret=None`` auto marker to a concrete
+        bool (interpret only on CPU) so compile-cache keys built from this
+        config always carry the real compilation mode."""
+        if self.pallas_interpret is not None:
+            return self
+        from repro.kernels.frontier_expand import resolve_interpret
+        return dataclasses.replace(self,
+                                   pallas_interpret=resolve_interpret(None))
 
 
 VARIANTS = tuple(

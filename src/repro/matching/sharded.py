@@ -11,11 +11,12 @@ Matcher` — :func:`repro.matching.solve.make_solver` with a mesh axis bound:
   (:meth:`DeviceCSR.shard`); each device owns ``nnz/D`` edges — the natural
   scale-out of the paper's CT strided edge ownership;
 * the O(n) BFS state (``bfs``/``root``/``pred``/``cmatch``/``rmatch``) is
-  replicated; every level each device sweeps proposals over its own edge
-  shard (the Pallas ``frontier_expand`` kernel when
-  ``config.use_pallas``, the jnp path otherwise) and the per-row winners
-  merge with one ``jax.lax.pmin`` — a single all-reduce per BFS level,
-  the minimal coordination any level-synchronous distributed BFS needs;
+  replicated; every level each device sweeps its own edge shard into a local
+  per-row winner vector (the fused Pallas ``frontier_expand_fused`` kernel
+  when ``config.use_pallas`` — each shard's min-merge happens inside its
+  kernel — the jnp sweep + scatter otherwise) and the shard winners merge
+  with one ``jax.lax.pmin`` — a single all-reduce per BFS level, the
+  minimal coordination any level-synchronous distributed BFS needs;
 * ``ALTERNATE``/``FIXMATCHING`` act on replicated O(n) state and therefore
   run redundantly-but-identically on every device (cheaper than sharding
   them: their cost is O(n) per phase vs O(nnz/D) for expansion).
@@ -78,6 +79,10 @@ class ShardedMatcher(Matcher):
                  config: MatcherConfig = MatcherConfig(),
                  warm_start: str = "none"):
         super().__init__(config, warm_start)
+        if self.config.adaptive_frontier:
+            raise ValueError(
+                "adaptive_frontier is single-device only; ShardedMatcher "
+                "keeps the dense per-shard sweep + one pmin per level")
         assert axis in mesh.axis_names, (axis, mesh.axis_names)
         self.mesh = mesh
         self.axis = axis

@@ -7,8 +7,16 @@ The paper launches one CUDA thread per column (MT) or a constant thread grid
 level is a single *edge-parallel* vector operation over all ``nnz`` edges:
 
 * the per-thread race "first writer wins" becomes a deterministic
-  ``min``-scatter (lowest proposing column wins) — same semantics class the
-  paper relies on, but reproducible;
+  ``min``-merge (lowest proposing column wins) — same semantics class the
+  paper relies on, but reproducible.  Three interchangeable sweeps produce
+  the identical per-row winner vector: the jnp path (proposals + XLA
+  scatter), the legacy Pallas path (proposal kernel + XLA scatter) and the
+  fused Pallas path (winner accumulator merged inside the kernel, no (nnz,)
+  intermediate — the default when ``use_pallas``);
+* beyond-paper, ``adaptive_frontier`` tracks the frontier size each level
+  and swaps the dense O(nnz) sweep for a compact column-gather sweep
+  (O(cap·dmax)) whenever the frontier is small enough, with a runtime
+  fallback that keeps the result bit-identical;
 * ``ALTERNATE`` (Alg. 3) walks all augmenting paths in lock-step inside a
   ``lax.while_loop``; the paper's line-8 predecessor check is a vector mask;
 * ``FIXMATCHING`` is the paper's repair pass, applied in both directions so
@@ -32,11 +40,14 @@ and the warm-start registry with zero host transfers.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+# the one definition of the TPU lane width (floor for any edge tile) lives
+# next to the kernels that tile over it
+from repro.kernels.frontier_expand import LANE
 
 from .config import MatcherConfig
 
@@ -57,44 +68,144 @@ def scatter_min(n: int, index, values):
     return out.at[n].set(IINF)
 
 
+def level0_state(cmatch):
+    """BFS state at the paper's start level for a given matching: ``bfs``
+    (unmatched columns are L0 roots, matched UNVISITED, sentinel NEG) and
+    ``root`` (own index if root).  The exact init ``phase_bfs`` performs —
+    shared with the kernel benches/tests so their probe states cannot drift
+    from what the solver actually sweeps.
+    """
+    nc = cmatch.shape[0] - 1
+    cols = jnp.arange(nc + 1, dtype=jnp.int32)
+    bfs = jnp.where(cmatch >= 0, UNVISITED, L0).at[nc].set(NEG)
+    root = jnp.where(cmatch >= 0, jnp.int32(nc), cols)
+    return bfs, root
+
+
+def default_block_edges(nnz_pad: int, schedule: str) -> int:
+    """Edge-tile size for the Pallas frontier kernel.
+
+    CT: big fixed tile (constant "thread" count, coarse grain);
+    MT: one-edge-per-lane fine grain -> smaller tiles.
+
+    Never degenerate: the kernel wrappers pad the edge arrays up to a tile
+    multiple, so the tile no longer has to divide ``nnz_pad`` (the old
+    ``gcd`` collapsed to 1-lane tiles on prime edge counts).  The result is
+    always a multiple of the 128-lane width, floor 128.
+    """
+    desired = 4096 if schedule == "ct" else 512
+    return min(desired, -(-nnz_pad // LANE) * LANE)
+
+
 # ---------------------------------------------------------------------------
 # BFS level expansion — the paper's Algorithms 2 (GPUBFS) and 4 (GPUBFS-WR)
 # ---------------------------------------------------------------------------
+def _winner_full(ecol, cadj, bfs, root, rmatch, level, nr, *, use_pallas: bool,
+                 pallas_fused: bool, block_edges: int,
+                 interpret: Optional[bool]):
+    """Dense O(nnz) sweep -> per-row winner vector (nr+1,)."""
+    if use_pallas and pallas_fused:
+        from repro.kernels.frontier_expand.ops import frontier_expand_fused
+        return frontier_expand_fused(ecol, cadj, bfs, root, rmatch, level,
+                                     block_edges=block_edges,
+                                     interpret=interpret)
+    if use_pallas:
+        from repro.kernels.frontier_expand.ops import frontier_expand
+        prop = frontier_expand(ecol, cadj, bfs, root, rmatch, level,
+                               block_edges=block_edges, interpret=interpret)
+    else:
+        target = _proposal_mask(ecol, cadj, bfs, root, rmatch, level)
+        prop = jnp.where(target, ecol, IINF)          # per-edge proposal
+    row_ix = jnp.where(prop < IINF, cadj, nr)
+    return scatter_min(nr, row_ix, prop)
+
+
+def _proposal_mask(ecol, cadj, bfs, root, rmatch, level):
+    """Per-edge proposal predicate — the ONE formula the kernels tile
+    (shared so jnp-vs-Pallas parity cannot drift; the jnp oracle in
+    kernels/frontier_expand/ref.py stays an independent copy on purpose)."""
+    from repro.kernels.frontier_expand.frontier_expand import _proposals
+    return _proposals(level, ecol, cadj, bfs, root, rmatch)
+
+
+def _winner_compact(cxadj, cadj, bfs, rmatch, nr, isf, *,
+                    cap: int, dmax: int):
+    """Compact column-gather sweep: O(cap·dmax) instead of O(nnz).
+
+    ``isf`` is the (nc,) frontier mask (WR refinement already applied) the
+    caller computed for the eligibility guard — passed in rather than
+    recomputed because XLA cannot CSE across the ``lax.cond`` boundary.
+    Gathers up to ``cap`` frontier columns and up to ``dmax`` edges each via
+    ``cxadj`` offsets.  Only called when the eligibility guard holds
+    (frontier fits the capacity), in which case every proposal of the dense
+    sweep is present and the min-merge winner is bit-identical.
+    """
+    nc = bfs.shape[0] - 1
+    nnz_pad = cadj.shape[0]
+    cols = jnp.nonzero(isf, size=cap, fill_value=nc)[0]         # (cap,)
+    starts = cxadj[jnp.minimum(cols, nc)]
+    ends = cxadj[jnp.minimum(cols + 1, nc)]                     # fill -> deg 0
+    offs = jnp.arange(dmax, dtype=jnp.int32)
+    eidx = starts[:, None] + offs[None, :]                      # (cap, dmax)
+    valid = offs[None, :] < (ends - starts)[:, None]
+    rows = jnp.where(valid, cadj[jnp.clip(eidx, 0, nnz_pad - 1)], nr)
+    cm = rmatch[rows]
+    col_unvis = bfs[jnp.clip(cm, 0, nc)] == UNVISITED
+    target = valid & ((cm >= 0) & col_unvis | (cm == -1))
+    prop = jnp.where(target, cols[:, None], IINF)
+    rows_ix = jnp.where(target, rows, nr)
+    return scatter_min(nr, rows_ix.ravel(), prop.ravel())
+
+
 def _expand_level(ecol, cadj, bfs, root, pred, rmatch, level, *, wr: bool,
                   wr_exact: bool, use_pallas: bool, block_edges: int,
-                  axis: Optional[str] = None):
+                  axis: Optional[str] = None, pallas_fused: bool = True,
+                  interpret: Optional[bool] = None, cxadj=None,
+                  adaptive: bool = False, compact_cap: int = 512,
+                  compact_dmax: int = 32):
     """One level-synchronous frontier expansion. Returns updated state.
 
     Edge-parallel: every edge (c, r) is one lane.  The per-row conflict
     (several frontier columns reaching the same row) is resolved with a
-    deterministic min-scatter, standing in for the paper's benign race.
+    deterministic min-merge, standing in for the paper's benign race — fused
+    into the Pallas kernel on the default Pallas path, a separate scatter on
+    the jnp and legacy paths.
 
     With ``axis`` set (inside ``shard_map``), ``ecol``/``cadj`` are this
     device's edge shard and the per-row winners of all shards merge with one
     ``lax.pmin`` over the mesh axis — the single collective any
     level-synchronous distributed BFS needs.  Everything after the merge
     operates on replicated O(n) state and is bit-identical on every device.
+
+    ``adaptive`` (requires ``cxadj``, single-device) sizes the frontier each
+    level and dispatches the compact column-gather sweep when it fits.
     """
     nc = bfs.shape[0] - 1
     nr = pred.shape[0] - 1
+    rt = root if wr else None
 
-    if use_pallas:
-        from repro.kernels.frontier_expand.ops import frontier_expand as _fe
-        prop = _fe(ecol, cadj, bfs, root if wr else None, rmatch, level,
-                   block_edges=block_edges)
-    else:
-        active = bfs[ecol] == level                       # frontier edges
+    def full(_):
+        return _winner_full(ecol, cadj, bfs, rt, rmatch, level, nr,
+                            use_pallas=use_pallas, pallas_fused=pallas_fused,
+                            block_edges=block_edges, interpret=interpret)
+
+    if adaptive:
+        assert cxadj is not None, "adaptive_frontier needs the cxadj offsets"
+        assert axis is None, "adaptive_frontier is single-device only"
+        isf = bfs[:-1] == level
         if wr:
-            myroot = root[ecol]
-            active &= bfs[myroot] >= UNVISITED            # early exit (Alg.4 l.6)
-        cm = rmatch[cadj]                                 # col matched to row
-        col_unvis = bfs[jnp.clip(cm, 0, nc)] == UNVISITED
-        target = active & ((cm >= 0) & col_unvis | (cm == -1))
-        prop = jnp.where(target, ecol, IINF)              # per-edge proposal
+            isf &= bfs[jnp.clip(root[:-1], 0, nc)] >= UNVISITED
+        deg = cxadj[1:] - cxadj[:-1]
+        eligible = ((jnp.sum(isf.astype(jnp.int32)) <= compact_cap)
+                    & (jnp.max(jnp.where(isf, deg, 0)) <= compact_dmax))
+        winner = jax.lax.cond(
+            eligible,
+            lambda _: _winner_compact(cxadj, cadj, bfs, rmatch, nr, isf,
+                                      cap=compact_cap, dmax=compact_dmax),
+            full, None)
+    else:
+        winner = full(None)
 
-    # per-row winner: lowest proposing column (deterministic "first writer")
-    row_ix = jnp.where(prop < IINF, cadj, nr)
-    winner = scatter_min(nr, row_ix, prop)
     if axis is not None:                                  # merge edge shards
         winner = jax.lax.pmin(winner, axis)
     upd_r = winner < IINF                                 # (nr+1,) rows reached
@@ -135,39 +246,57 @@ def _alternate(cmatch, rmatch, pred, start_mask, max_steps):
     ``start_mask`` selects the endpoint rows that launch walkers.  Writes of
     concurrent walkers are merged with min-scatters; the paper's line-8
     predecessor check breaks walkers that would chase another path.
+
+    Per step this does ONE ``pred`` gather: the lookup for the next
+    position (``pred[matched_row]``) doubles as the line-8 check, and its
+    value is carried in the loop state so the old per-step
+    ``pred[clip(cur)]`` re-gather is gone.  The two min-scatters only run on
+    steps that still have an unbroken walker.  Returns
+    ``(cmatch, rmatch, steps)`` — the step count is part of the contract so
+    the optimization stays observable (see tests/test_frontier_paths.py).
     """
     nc = cmatch.shape[0] - 1
     nr = rmatch.shape[0] - 1
     rows = jnp.arange(nr + 1, dtype=jnp.int32)
     cur0 = jnp.where(start_mask, rows, jnp.int32(-1))
+    pmc0 = pred[jnp.clip(cur0, 0, nr)]                    # pred[cur], hoisted
 
     def cond(carry):
-        cur, _, _, steps = carry
+        cur, _, _, _, steps = carry
         return jnp.any(cur >= 0) & (steps < max_steps)
 
     def body(carry):
-        cur, cmatch, rmatch, steps = carry
+        cur, pmc, cmatch, rmatch, steps = carry
         active = cur >= 0
         curc = jnp.clip(cur, 0, nr)
-        mc = pred[curc]                                   # matched_col
+        mc = pmc                                          # matched_col = pred[cur]
         mcc = jnp.clip(mc, 0, nc)
         mr = cmatch[mcc]                                  # matched_row (snapshot)
+        pmr = pred[jnp.clip(mr, 0, nr)]                   # the step's one gather
         # paper line 8: if predecessor[matched_row] == matched_col: break
-        brk = active & (mr >= 0) & (pred[jnp.clip(mr, 0, nr)] == mc)
+        brk = active & (mr >= 0) & (pmr == mc)
         act = active & ~brk
-        # cmatch[mc] <- cur ; rmatch[cur] <- mc   (speculative, min-merged)
-        cprop = scatter_min(nc, jnp.where(act, mcc, nc),
-                            jnp.where(act, cur, IINF))
-        cmatch = jnp.where(cprop < IINF, cprop, cmatch)
-        rprop = scatter_min(nr, jnp.where(act, curc, nr),
-                            jnp.where(act, mc, IINF))
-        rmatch = jnp.where(rprop < IINF, rprop, rmatch)
-        cur = jnp.where(act, mr, jnp.int32(-1))
-        return cur, cmatch, rmatch, steps + 1
 
-    _, cmatch, rmatch, _ = jax.lax.while_loop(
-        cond, body, (cur0, cmatch, rmatch, jnp.int32(0)))
-    return cmatch, rmatch
+        def scatters(ms):
+            cm, rm = ms
+            # cmatch[mc] <- cur ; rmatch[cur] <- mc  (speculative, min-merged)
+            cprop = scatter_min(nc, jnp.where(act, mcc, nc),
+                                jnp.where(act, cur, IINF))
+            cm = jnp.where(cprop < IINF, cprop, cm)
+            rprop = scatter_min(nr, jnp.where(act, curc, nr),
+                                jnp.where(act, mc, IINF))
+            rm = jnp.where(rprop < IINF, rprop, rm)
+            return cm, rm
+
+        # every walker broke this step -> both scatters would be all-sentinel
+        cmatch, rmatch = jax.lax.cond(jnp.any(act), scatters,
+                                      lambda ms: ms, (cmatch, rmatch))
+        cur = jnp.where(act, mr, jnp.int32(-1))
+        return cur, pmr, cmatch, rmatch, steps + 1
+
+    _, _, cmatch, rmatch, steps = jax.lax.while_loop(
+        cond, body, (cur0, pmc0, cmatch, rmatch, jnp.int32(0)))
+    return cmatch, rmatch, steps
 
 
 def _fix_matching(cmatch, rmatch):
@@ -192,21 +321,11 @@ def _cardinality(cmatch):
     return jnp.sum((cmatch[:-1] >= 0).astype(jnp.int32))
 
 
-def default_block_edges(nnz_pad: int, schedule: str) -> int:
-    """Edge-tile size for the Pallas frontier kernel.
-
-    CT: big fixed tile (constant "thread" count, coarse grain);
-    MT: one-edge-per-lane fine grain -> smaller tiles.
-    """
-    desired = 4096 if schedule == "ct" else 512
-    return math.gcd(nnz_pad, desired)
-
-
 # ---------------------------------------------------------------------------
 # Drivers — Algorithm 1 (APsB) and its APFB variant
 # ---------------------------------------------------------------------------
 def make_solver(cfg: MatcherConfig, axis: Optional[str] = None):
-    """Build the pure matcher ``(ecol, cadj, cmatch, rmatch) ->
+    """Build the pure matcher ``(ecol, cadj, cmatch, rmatch[, cxadj]) ->
     (cmatch, rmatch, phases, fallbacks)``.
 
     Shape-polymorphic: ``nc``/``nr``/``block_edges`` are derived from the
@@ -216,24 +335,38 @@ def make_solver(cfg: MatcherConfig, axis: Optional[str] = None):
     ``axis`` names a mesh axis for the distributed variant: the returned
     function then expects to run *inside* ``shard_map`` with ``ecol``/``cadj``
     edge-sharded over that axis and the O(n) state replicated.  The only
-    communication is one ``pmin`` per BFS level in :func:`_expand_level`;
-    ALTERNATE and FIXMATCHING run redundantly-but-identically on the
-    replicated state (their cost is O(n) per phase vs O(nnz/D) for
-    expansion, so sharding them would buy nothing).
+    communication is one ``pmin`` per BFS level in :func:`_expand_level` —
+    on the fused Pallas path each shard's kernel already emits its local
+    per-row winner vector, so the pmin is the whole merge.  ALTERNATE and
+    FIXMATCHING run redundantly-but-identically on the replicated state
+    (their cost is O(n) per phase vs O(nnz/D) for expansion, so sharding
+    them would buy nothing).
+
+    ``cfg.adaptive_frontier`` additionally needs the ``cxadj`` offsets
+    (pass ``match_fn(..., cxadj=graph.cxadj)``) and is single-device only.
     """
     wr = cfg.kernel == "gpubfs_wr"
+    if cfg.adaptive_frontier and axis is not None:
+        raise ValueError(
+            "adaptive_frontier composes with the dense per-shard sweep only; "
+            "disable it for ShardedMatcher (axis=%r)" % (axis,))
 
-    def match_fn(ecol, cadj, cmatch, rmatch):
+    def match_fn(ecol, cadj, cmatch, rmatch, cxadj=None):
+        if cfg.adaptive_frontier and cxadj is None:
+            raise ValueError(
+                "adaptive_frontier needs the cxadj column offsets; call the "
+                "solver with cxadj= (Matcher.solve passes graph.cxadj)")
         nc = cmatch.shape[0] - 1
         nr = rmatch.shape[0] - 1
-        block_edges = default_block_edges(int(ecol.shape[0]), cfg.schedule)
+        block_edges = cfg.pallas_block_edges or default_block_edges(
+            int(ecol.shape[0]), cfg.schedule)
+        # auto compact geometry: keep the compact sweep well under O(nnz)
+        compact_cap = cfg.compact_cap or max(64, min(1024, nc // 8))
+        compact_dmax = cfg.compact_dmax or 8
 
         def phase_bfs(cmatch, rmatch):
             """Inner while of Alg. 1: level-synchronous BFS to exhaustion/first hit."""
-            cols = jnp.arange(nc + 1, dtype=jnp.int32)
-            bfs = jnp.where(cmatch >= 0, UNVISITED, L0)
-            bfs = bfs.at[nc].set(NEG)
-            root = jnp.where(cmatch >= 0, jnp.int32(nc), cols)  # own index if root
+            bfs, root = level0_state(cmatch)
             pred = jnp.full(nr + 1, jnp.int32(nc), jnp.int32)   # fresh each phase
 
             def cond(c):
@@ -252,7 +385,12 @@ def make_solver(cfg: MatcherConfig, axis: Optional[str] = None):
                 bfs, root, pred, rmatch, ins, aug_l = _expand_level(
                     ecol, cadj, bfs, root, pred, rmatch, level, wr=wr,
                     wr_exact=cfg.wr_exact, use_pallas=cfg.use_pallas,
-                    block_edges=block_edges, axis=axis)
+                    block_edges=block_edges, axis=axis,
+                    pallas_fused=cfg.pallas_fused,
+                    interpret=cfg.pallas_interpret, cxadj=cxadj,
+                    adaptive=cfg.adaptive_frontier,
+                    compact_cap=compact_cap,
+                    compact_dmax=compact_dmax)
                 aug_lvl = jnp.where(aug_l & (aug_lvl == IINF), level, aug_lvl)
                 return (bfs, root, pred, rmatch, level + 1, ins, aug | aug_l,
                         aug_lvl)
@@ -284,8 +422,9 @@ def make_solver(cfg: MatcherConfig, axis: Optional[str] = None):
 
             def do_phase(_):
                 mask = start_mask_fn(bfs, root, rmatch_b)
-                cm1, rm1 = _alternate(cm0, jnp.where(mask, jnp.int32(-2), rm0),
-                                      pred, mask, max_steps)
+                cm1, rm1, _ = _alternate(cm0,
+                                         jnp.where(mask, jnp.int32(-2), rm0),
+                                         pred, mask, max_steps)
                 cm1, rm1 = _fix_matching(cm1, rm1)
 
                 def fallback(_):
@@ -294,7 +433,7 @@ def make_solver(cfg: MatcherConfig, axis: Optional[str] = None):
                     any_ep = rmatch_b == -2
                     first = jnp.argmax(any_ep)                   # lowest endpoint row
                     one = jnp.zeros(nr + 1, bool).at[first].set(jnp.any(any_ep))
-                    cm2, rm2 = _alternate(cm0, rm0, pred, one, max_steps)
+                    cm2, rm2, _ = _alternate(cm0, rm0, pred, one, max_steps)
                     return _fix_matching(cm2, rm2) + (jnp.int32(1),)
 
                 cm1, rm1, fb = jax.lax.cond(

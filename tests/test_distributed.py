@@ -68,17 +68,30 @@ assert info3["misses"] == info2["misses"] + 1, (info2, info3)
 print("DIST_OK")
 """
 
-# The Pallas frontier_expand kernel as the per-shard proposal sweep.
+# The fused Pallas frontier kernel as the per-shard sweep: each shard's
+# winner merge happens inside its kernel, one pmin merges the shards, and
+# the result must be BIT-identical to the single-device jnp path (the
+# deterministic min-merge makes every sweep path interchangeable).
 PALLAS = PRELUDE + """
+import dataclasses
 g = cases["rand"]
 opt = maximum_cardinality(g)
-sharded_g = DeviceCSR.from_host(g).shard(mesh, "data")
+graph = DeviceCSR.from_host(g)
+sharded_g = graph.shard(mesh, "data")
 for schedule in ("ct", "mt"):
     cfg = MatcherConfig(algo="apfb", kernel="gpubfs_wr", schedule=schedule,
                         use_pallas=True)
-    st = ShardedMatcher(mesh, config=cfg, warm_start="cheap").run(sharded_g)
-    cm, rm = st.to_host()
-    assert validate_matching(g, cm, rm) == opt, schedule
+    single = Matcher(dataclasses.replace(cfg, use_pallas=False),
+                     warm_start="cheap").run(graph)
+    for fused in (True, False):
+        fcfg = dataclasses.replace(cfg, pallas_fused=fused)
+        st = ShardedMatcher(mesh, config=fcfg, warm_start="cheap").run(sharded_g)
+        cm, rm = st.to_host()
+        assert validate_matching(g, cm, rm) == opt, (schedule, fused)
+        np.testing.assert_array_equal(np.asarray(st.cmatch),
+                                      np.asarray(single.cmatch))
+        np.testing.assert_array_equal(np.asarray(st.rmatch),
+                                      np.asarray(single.rmatch))
 print("DIST_OK")
 """
 

@@ -1,0 +1,233 @@
+"""Every frontier-sweep execution path against the one deterministic
+min-merge contract (ISSUE 4: the fused kernel must be bit-identical to the
+scatter_min-merged proposals on all variants), plus the edge-tile geometry
+fixes and the ALTERNATE micro-optimizations.
+
+Split by concern:
+* kernel-level: fused winners == scatter_min(legacy proposals) == fused ref;
+* solver-level: jnp / Pallas-interpret / Pallas-compiled / adaptive sweeps
+  give bit-identical matchings across the paper's variant matrix and both
+  WR encodings (compiled skipped on hosts without a non-CPU backend);
+* geometry: `default_block_edges` no longer degenerates on prime edge
+  counts, bad tiles raise a typed ValueError at trace time;
+* ALTERNATE: the gather-hoisted, scatter-skipping loop is a step-count-
+  preserving rewrite of the straightforward body.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (MatcherConfig, VARIANTS, cheap_matching_jax,
+                        maximum_cardinality, maximum_matching,
+                        validate_matching)
+from repro.graphs import random_bipartite, scaled_free
+from repro.kernels.frontier_expand import (frontier_expand,
+                                           frontier_expand_fused,
+                                           frontier_expand_fused_ref,
+                                           resolve_interpret)
+from repro.matching.solve import (IINF, _alternate, default_block_edges,
+                                  level0_state, scatter_min)
+
+CPU_ONLY = jax.default_backend() == "cpu"
+
+
+def _bfs_state(g):
+    """Level-L0 probe state via the solver's own ``level0_state`` init."""
+    cm, rm = cheap_matching_jax(g)
+    cmj = jnp.concatenate([jnp.asarray(cm), jnp.array([-3], jnp.int32)])
+    rmj = jnp.concatenate([jnp.asarray(rm), jnp.array([-3], jnp.int32)])
+    bfs, root = level0_state(cmj)
+    return bfs, root, rmj
+
+
+# ---------------------------------------------------------------------------
+# kernel level
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("nc,nr,deg,pad,blk", [
+    (256, 256, 3.0, 1024, 256),
+    (500, 700, 4.0, 3000, 512),      # pad not a multiple of the tile
+    (300, 200, 5.0, 2048, 999),      # tile not a divisor of anything nice
+    (64, 64, 2.0, 128, 4096),        # tile bigger than the edge array
+])
+def test_fused_kernel_bit_identical_to_scatter_min(nc, nr, deg, pad, blk):
+    g = random_bipartite(nc, nr, deg, seed=nc + nr, pad_to=pad)
+    bfs, root, rmj = _bfs_state(g)
+    ecol, cadj = jnp.asarray(g.ecol), jnp.asarray(g.cadj)
+    for rt in (root, None):
+        prop = frontier_expand(ecol, cadj, bfs, rt, rmj, 2, block_edges=blk)
+        merged = scatter_min(nr, jnp.where(prop < IINF, cadj, nr), prop)
+        fused = frontier_expand_fused(ecol, cadj, bfs, rt, rmj, 2,
+                                      block_edges=blk)
+        ref = frontier_expand_fused_ref(ecol, cadj, bfs, rt, rmj,
+                                        jnp.int32(2))
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(merged))
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# geometry
+# ---------------------------------------------------------------------------
+def test_default_block_edges_never_degenerate():
+    """The old gcd collapsed to 1-lane tiles on prime edge counts; the tile
+    is now clamped-desired with a 128-lane floor (padding absorbs the rest).
+    """
+    for nnz in (997, 1, 130, 2048, 4096, 65536, 99991):
+        for schedule in ("ct", "mt"):
+            blk = default_block_edges(nnz, schedule)
+            assert blk >= 128, (nnz, schedule, blk)
+            assert blk % 128 == 0, (nnz, schedule, blk)
+    assert default_block_edges(65536, "ct") == 4096    # CT coarse tiles
+    assert default_block_edges(65536, "mt") == 512     # MT fine tiles
+    assert default_block_edges(997, "ct") == 1024      # clamped to the pad
+    assert default_block_edges(64, "mt") == 128        # floor
+
+
+def test_bad_block_edges_raises_typed_error():
+    g = random_bipartite(64, 64, 2.0, seed=0, pad_to=256)
+    bfs, root, rmj = _bfs_state(g)
+    ecol, cadj = jnp.asarray(g.ecol), jnp.asarray(g.cadj)
+    for entry in (frontier_expand, frontier_expand_fused):
+        with pytest.raises(ValueError, match=r"block_edges=0 for nnz=256"):
+            entry(ecol, cadj, bfs, root, rmj, 2, block_edges=0)
+        with pytest.raises(ValueError, match="block_edges"):
+            entry(ecol, cadj, bfs, root, rmj, 2, block_edges=-4)
+
+
+# ---------------------------------------------------------------------------
+# solver level: the full variant matrix, every sweep path
+# ---------------------------------------------------------------------------
+def _encoding_matrix():
+    """All eight variants, and for the WR kernel both endpoint encodings."""
+    out = {}
+    for v in VARIANTS:
+        encs = (False, True) if v.kernel == "gpubfs_wr" else (False,)
+        for e in encs:
+            cfg = dataclasses.replace(v, wr_exact=e)
+            out[cfg.name + ("-exact" if e and not v.wr_exact else "")] = cfg
+    return sorted(out.values(), key=lambda c: (c.name, c.wr_exact))
+
+
+PATHS = {
+    "pallas_fused": dict(use_pallas=True),
+    "pallas_legacy": dict(use_pallas=True, pallas_fused=False),
+    "adaptive": dict(adaptive_frontier=True, compact_cap=64, compact_dmax=8),
+}
+
+
+@pytest.mark.parametrize("cfg", _encoding_matrix(), ids=lambda c:
+                         f"{c.name}{'-exact' if c.wr_exact else ''}")
+def test_sweep_paths_bit_identical(cfg):
+    g = random_bipartite(180, 170, 3.0, seed=17)
+    opt = maximum_cardinality(g)
+    cm0, rm0 = cheap_matching_jax(g)
+    ref_cm, ref_rm, st = maximum_matching(g, cfg, cm0, rm0)
+    assert validate_matching(g, ref_cm, ref_rm) == opt, st
+    for pname, overrides in PATHS.items():
+        pcfg = dataclasses.replace(cfg, **overrides)
+        cm, rm, pst = maximum_matching(g, pcfg, cm0, rm0)
+        np.testing.assert_array_equal(ref_cm, cm, err_msg=pname)
+        np.testing.assert_array_equal(ref_rm, rm, err_msg=pname)
+
+
+@pytest.mark.skipif(CPU_ONLY, reason="no non-CPU backend: Pallas cannot "
+                    "compile, interpret parity is covered above")
+@pytest.mark.parametrize("cfg", [VARIANTS[1], VARIANTS[3]],
+                         ids=lambda c: c.name)
+def test_sweep_paths_compiled_parity(cfg):
+    """On accelerator hosts the compiled kernels must equal the jnp path."""
+    g = random_bipartite(256, 256, 3.0, seed=23)
+    cm0, rm0 = cheap_matching_jax(g)
+    ref_cm, ref_rm, _ = maximum_matching(g, cfg, cm0, rm0)
+    for fused in (True, False):
+        pcfg = dataclasses.replace(cfg, use_pallas=True, pallas_fused=fused,
+                                   pallas_interpret=False)
+        cm, rm, _ = maximum_matching(g, pcfg, cm0, rm0)
+        np.testing.assert_array_equal(ref_cm, cm)
+        np.testing.assert_array_equal(ref_rm, rm)
+
+
+def test_adaptive_runtime_fallback_on_skewed_degrees():
+    """Power-law columns exceed dmax -> runtime falls back to the dense
+    sweep; the result must stay bit-identical and maximum."""
+    g = scaled_free(300, 300, 5.0, seed=3)
+    cfg = MatcherConfig(algo="apfb", kernel="gpubfs_wr")
+    ref_cm, ref_rm, _ = maximum_matching(g, cfg)
+    acfg = dataclasses.replace(cfg, adaptive_frontier=True,
+                               compact_cap=64, compact_dmax=2)
+    cm, rm, _ = maximum_matching(g, acfg)
+    np.testing.assert_array_equal(ref_cm, cm)
+    np.testing.assert_array_equal(ref_rm, rm)
+    assert validate_matching(g, cm, rm) == maximum_cardinality(g)
+
+
+# ---------------------------------------------------------------------------
+# config / cache plumbing
+# ---------------------------------------------------------------------------
+def test_interpret_resolution_in_cache_key():
+    from repro.matching import Matcher
+    auto = Matcher(MatcherConfig(use_pallas=True))
+    assert auto.config.pallas_interpret == (jax.default_backend() == "cpu")
+    assert resolve_interpret(None) == auto.config.pallas_interpret
+    pinned = Matcher(MatcherConfig(use_pallas=True, pallas_interpret=True))
+    assert pinned.config.pallas_interpret is True
+    # the resolved bool (not the None marker) is what lands in cache keys
+    assert auto.config == MatcherConfig(
+        use_pallas=True, pallas_interpret=auto.config.pallas_interpret)
+
+
+# ---------------------------------------------------------------------------
+# ALTERNATE: optimized loop == straightforward loop, step for step
+# ---------------------------------------------------------------------------
+def _alternate_reference(cmatch, rmatch, pred, start_mask, max_steps):
+    """The pre-optimization ALTERNATE body (two pred gathers per step, both
+    scatters unconditional) with the step count exposed."""
+    nc = cmatch.shape[0] - 1
+    nr = rmatch.shape[0] - 1
+    rows = jnp.arange(nr + 1, dtype=jnp.int32)
+    cur0 = jnp.where(start_mask, rows, jnp.int32(-1))
+
+    def cond(carry):
+        cur, _, _, steps = carry
+        return jnp.any(cur >= 0) & (steps < max_steps)
+
+    def body(carry):
+        cur, cmatch, rmatch, steps = carry
+        active = cur >= 0
+        curc = jnp.clip(cur, 0, nr)
+        mc = pred[curc]
+        mcc = jnp.clip(mc, 0, nc)
+        mr = cmatch[mcc]
+        brk = active & (mr >= 0) & (pred[jnp.clip(mr, 0, nr)] == mc)
+        act = active & ~brk
+        cprop = scatter_min(nc, jnp.where(act, mcc, nc),
+                            jnp.where(act, cur, IINF))
+        cmatch = jnp.where(cprop < IINF, cprop, cmatch)
+        rprop = scatter_min(nr, jnp.where(act, curc, nr),
+                            jnp.where(act, mc, IINF))
+        rmatch = jnp.where(rprop < IINF, rprop, rmatch)
+        cur = jnp.where(act, mr, jnp.int32(-1))
+        return cur, cmatch, rmatch, steps + 1
+
+    _, cmatch, rmatch, steps = jax.lax.while_loop(
+        cond, body, (cur0, cmatch, rmatch, jnp.int32(0)))
+    return cmatch, rmatch, steps
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_alternate_optimized_is_step_count_preserving(seed):
+    rng = np.random.default_rng(seed)
+    nc = nr = 60
+    pred = jnp.asarray(rng.integers(0, nc + 1, size=nr + 1), jnp.int32)
+    cmatch = jnp.asarray(rng.integers(-1, nr, size=nc + 1), jnp.int32)
+    rmatch = jnp.asarray(rng.integers(-2, nc, size=nr + 1), jnp.int32)
+    start = jnp.asarray(rng.random(nr + 1) < 0.2)
+    start = start.at[nr].set(False)
+    max_steps = jnp.int32(12)
+    ref = _alternate_reference(cmatch, rmatch, pred, start, max_steps)
+    opt = _alternate(cmatch, rmatch, pred, start, max_steps)
+    for a, b, what in zip(ref, opt, ("cmatch", "rmatch", "steps")):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=what)
