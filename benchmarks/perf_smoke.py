@@ -1,5 +1,5 @@
 """§Perf-smoke: the level-sweep microbench + solve bench behind the repo's
-committed perf baseline (``BENCH_PR4.json``).
+committed perf baseline (``BENCH_PR5.json``).
 
 Every row carries a machine-portable ``rel`` ratio (path time over the jnp
 path's time on the same input) so the CI regression gate compares relative
@@ -9,18 +9,23 @@ sub-millisecond detail rows are for humans, too noisy to gate on.  Row sets:
 
 * ``perf_smoke.sweep`` — ONE BFS level of frontier expansion (the O(nnz) hot
   loop of Figs. 2-5) through each winner path: ``jnp`` (proposals + XLA
-  scatter), ``pallas_legacy`` (proposal kernel + XLA scatter) and
-  ``pallas_fused`` (in-kernel winner merge).  On CPU hosts the Pallas paths
-  run through the interpreter (``mode=interpret``); on accelerator backends
-  the same rows carry ``mode=compiled`` — the fused compiled path is the
-  one the paper's speedup story rests on.
+  scatter), ``pallas_legacy`` (proposal kernel + XLA scatter),
+  ``pallas_fused`` (in-kernel winner merge) and ``pallas_pull`` (the
+  direction-optimizing pull kernel streaming the CSC mirror).  On CPU hosts
+  the Pallas paths run through the interpreter (``mode=interpret``); on
+  accelerator backends the same rows carry ``mode=compiled`` — the fused
+  compiled path is the one the paper's speedup story rests on.
 * ``perf_smoke.solve`` — full ``Matcher.run`` geomeans per sweep config
-  (includes the beyond-paper ``adaptive_frontier`` dispatch).
+  (includes the beyond-paper ``adaptive_frontier`` and ``dirop``
+  dispatches).
 
-Run directly, or through the harness + regression gate:
+Run directly, or through the harness + regression gate (refresh the
+committed baseline with ``--update-baseline``, never by hand):
 
     python -m benchmarks.run --only perf_smoke --scale tiny \
-        --json BENCH_PR4.json --baseline BENCH_PR4.json
+        --json bench_new.json --baseline BENCH_PR5.json
+    python -m benchmarks.run --only perf_smoke --scale tiny \
+        --update-baseline BENCH_PR5.json --runs 3
 """
 from __future__ import annotations
 
@@ -36,7 +41,9 @@ from repro.graphs import random_bipartite, scaled_free
 from repro.kernels.frontier_expand import (frontier_expand,
                                            frontier_expand_fused,
                                            frontier_expand_fused_ref,
+                                           frontier_expand_pull,
                                            resolve_interpret)
+from repro.matching.device_csr import DeviceCSR
 from repro.matching.solve import (IINF, default_block_edges, level0_state,
                                   scatter_min)
 from .common import geomean, time_call, time_matcher
@@ -60,6 +67,12 @@ def _sweep_state(g):
     rmj = jnp.concatenate([jnp.asarray(rm), jnp.array([-3], jnp.int32)])
     bfs, root = level0_state(cmj)
     return jnp.asarray(g.ecol), jnp.asarray(g.cadj), bfs, root, rmj
+
+
+def _csc_arrays(g):
+    """The row-sorted (radj, erow) mirror the pull kernel streams."""
+    d = DeviceCSR.from_host(g).with_csc()
+    return d.radj, d.erow
 
 
 # the rel denominator: the SAME proposals + per-row min-merge oracle the
@@ -87,7 +100,15 @@ def _sweep_paths(interpret: bool):
         return frontier_expand_fused(ecol, cadj, bfs, root, rmj, 2,
                                      block_edges=blk, interpret=interpret)
 
-    return {"pallas_legacy": legacy, "pallas_fused": fused}
+    @functools.partial(jax.jit, static_argnames=("blk",))
+    def pull(radj, erow, bfs, root, rmj, *, blk):
+        # same winner contract, CSC edge stream (row-sorted tiles whose
+        # merge skips when the tile proposes nothing)
+        return frontier_expand_pull(radj, erow, bfs, root, rmj, 2,
+                                    block_edges=blk, interpret=interpret)
+
+    return {"pallas_legacy": legacy, "pallas_fused": fused,
+            "pallas_pull": pull}
 
 
 def run(scale: str = "tiny") -> List[str]:
@@ -100,6 +121,7 @@ def run(scale: str = "tiny") -> List[str]:
     for gname, build in _SCALES[scale]:
         g = build()
         ecol, cadj, bfs, root, rmj = _sweep_state(g)
+        radj, erow = _csc_arrays(g)
         blk = default_block_edges(int(ecol.shape[0]), "ct")
 
         def timed(fn):
@@ -115,7 +137,8 @@ def run(scale: str = "tiny") -> List[str]:
         rows.append(f"perf_smoke.sweep,{backend},xla,{gname},jnp,-,"
                     f"{base*1e3:.3f},1.000")
         for pname, fn in _sweep_paths(interpret).items():
-            t = timed(lambda: fn(ecol, cadj, bfs, root, rmj, blk=blk))
+            ea, eb = (radj, erow) if pname == "pallas_pull" else (ecol, cadj)
+            t = timed(lambda: fn(ea, eb, bfs, root, rmj, blk=blk))
             rows.append(f"perf_smoke.sweep,{backend},{mode},{gname},{pname},"
                         f"{blk},{t*1e3:.3f},{t/base:.3f}")
             rels.setdefault(pname, []).append(t / base)
@@ -136,6 +159,8 @@ def run(scale: str = "tiny") -> List[str]:
                                         use_pallas=True, pallas_fused=False)),
         ("adaptive", MatcherConfig(algo="apfb", kernel="gpubfs_wr",
                                    adaptive_frontier=True)),
+        ("dirop", MatcherConfig(algo="apfb", kernel="gpubfs_wr",
+                                dirop=True)),
     ]
     insts = [(n, b()) for n, b in _SCALES[scale]]
     prepared = [(n, g, *cheap_matching_jax(g)) for n, g in insts]

@@ -41,6 +41,8 @@ def maximum_matching(
     Thin host wrapper: uploads once, runs :meth:`Matcher.run`, downloads once.
     """
     graph = DeviceCSR.from_host(g)
+    if cfg.dirop:
+        graph = graph.with_csc()    # the pull sweep gathers the CSC mirror
     state = None
     if cmatch0 is not None:
         state = MatchState.from_host(np.asarray(cmatch0, np.int32),

@@ -1,7 +1,10 @@
 from .frontier_expand import LANE
-from .ops import (frontier_expand, frontier_expand_fused, resolve_interpret)
-from .ref import frontier_expand_fused_ref, frontier_expand_ref
+from .ops import (frontier_expand, frontier_expand_fused,
+                  frontier_expand_pull, resolve_interpret)
+from .ref import (frontier_expand_fused_ref, frontier_expand_pull_ref,
+                  frontier_expand_ref)
 
 __all__ = ["LANE", "frontier_expand", "frontier_expand_fused",
-           "frontier_expand_ref", "frontier_expand_fused_ref",
+           "frontier_expand_pull", "frontier_expand_ref",
+           "frontier_expand_fused_ref", "frontier_expand_pull_ref",
            "resolve_interpret"]

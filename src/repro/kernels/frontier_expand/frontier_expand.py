@@ -19,7 +19,7 @@ On TPU the analogous structure is:
   coarse-grained strided batches correspond to large tiles (4096 lanes),
   MT's fine-grained one-vertex-per-thread to small tiles (512).
 
-Two kernel families share one proposal formula (:func:`_proposals`):
+Three kernel families share one proposal formula (:func:`_proposals`):
 
 * :func:`frontier_expand` (legacy) emits the per-edge column proposals
   (IINF = no proposal) as an (nnz,) array; the deterministic per-row
@@ -42,6 +42,18 @@ Two kernel families share one proposal formula (:func:`_proposals`):
   (tests/test_frontier_paths.py), which run on accelerator hosts only; if
   Mosaic ever regresses on this shape the loud failure is there, and
   ``MatcherConfig(pallas_fused=False)`` restores the two-step path.
+* :func:`frontier_expand_pull` (``_kernel_pull`` / ``_kernel_pull_wr``) is
+  the direction-optimizing *pull* sweep: the same accumulator contract as
+  the fused family, but streaming the **CSC mirror** (``radj``/``erow``, the
+  row-sorted edge list of ``DeviceCSR.with_csc``).  Because the edges are
+  row-sorted, each tile is a contiguous *row range*; late in a BFS most
+  rows are already reached, their tiles propose nothing, and the kernel
+  skips the (sequential, VPU-hostile) scatter for the whole tile via
+  ``pl.when(any(proposals))`` — the per-level scatter work becomes
+  proportional to the tiles that still contain unreached rows instead of
+  all of them.  The proposal predicate is symmetric in edge order, and min
+  is the merge, so the pull winners are bit-identical to the push families
+  on the same edge set (asserted in tests/test_frontier_paths.py).
 
 Edge geometry: callers may pass any ``block_edges >= 1``; the wrappers pad
 the edge arrays up to the next tile multiple with inert sentinel edges
@@ -189,17 +201,71 @@ def _kernel_fused_plain(level_ref, ecol_ref, cadj_ref, bfs_ref, rmatch_ref,
 
 
 # ---------------------------------------------------------------------------
+# Pull kernels: CSC (row-sorted) edge stream, tile-skipping merge
+# ---------------------------------------------------------------------------
+def _merge_tile_pull(target, cols, rows, win_ref):
+    """Like :func:`_merge_tile`, but the merge is predicated on the tile
+    proposing anything at all.
+
+    The pull stream is row-sorted, so a tile covers a contiguous row range;
+    once those rows are reached the tile goes permanently quiet and the
+    sequential in-VMEM scatter — the expensive part of the sweep — is
+    skipped wholesale.  Init/seal stay unconditional (the accumulator
+    contract does not depend on which tiles were quiet).
+    """
+    nr = win_ref.shape[0] - 1
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        win_ref[...] = jnp.full(win_ref.shape, IINF, jnp.int32)
+
+    @pl.when(jnp.any(target))
+    def _merge():
+        prop = jnp.where(target, cols, jnp.int32(IINF))
+        rows_ix = jnp.where(target, rows, jnp.int32(nr))
+        win_ref[...] = win_ref[...].at[rows_ix].min(prop)
+
+    @pl.when(pl.program_id(0) == pl.num_programs(0) - 1)
+    def _seal():
+        win_ref[...] = win_ref[...].at[nr].set(jnp.int32(IINF))
+
+
+def _kernel_pull_wr(level_ref, radj_ref, erow_ref, bfs_ref, root_ref,
+                    rmatch_ref, win_ref):
+    cols, rows = radj_ref[...], erow_ref[...]
+    target = _proposals(level_ref[0], cols, rows, bfs_ref[...],
+                        root_ref[...], rmatch_ref[...])
+    _merge_tile_pull(target, cols, rows, win_ref)
+
+
+def _kernel_pull(level_ref, radj_ref, erow_ref, bfs_ref, rmatch_ref, win_ref):
+    cols, rows = radj_ref[...], erow_ref[...]
+    target = _proposals(level_ref[0], cols, rows, bfs_ref[...],
+                        None, rmatch_ref[...])
+    _merge_tile_pull(target, cols, rows, win_ref)
+
+
+# ---------------------------------------------------------------------------
 # Public wrappers
 # ---------------------------------------------------------------------------
+_KERNELS = {                       # family -> (wr kernel, plain kernel)
+    "legacy": (_kernel_wr, _kernel_plain),
+    "fused": (_kernel_fused_wr, _kernel_fused_plain),
+    "pull": (_kernel_pull_wr, _kernel_pull),
+}
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("block_edges", "interpret", "fused"))
+                   static_argnames=("block_edges", "interpret", "family"))
 def _sweep_impl(ecol, cadj, bfs, root, rmatch, level, *, block_edges: int,
-                interpret: bool, fused: bool):
-    """One pallas_call builder for both kernel families.
+                interpret: bool, family: str):
+    """One pallas_call builder for all three kernel families.
 
     The edge padding, grid, and every input spec are identical; the
     families differ only in kernel body and output contract (edge-tiled
-    (nnz,) proposals vs the carried (nr+1,) winner accumulator).
+    (nnz,) proposals vs the carried (nr+1,) winner accumulator).  For the
+    pull family ``ecol``/``cadj`` are the CSC mirror's ``radj``/``erow`` —
+    same (column, row) endpoint roles, row-sorted order.
     """
     nnz = ecol.shape[0]
     nc = bfs.shape[0] - 1
@@ -221,18 +287,18 @@ def _sweep_impl(ecol, cadj, bfs, root, rmatch, level, *, block_edges: int,
     in_specs.append(rep(rmatch))
     args.append(rmatch)
 
-    if fused:
-        kernel = _kernel_fused_wr if root is not None else _kernel_fused_plain
-        out_specs = pl.BlockSpec((nr + 1,), lambda i: (0,))  # carried acc
-        out_shape = jax.ShapeDtypeStruct((nr + 1,), jnp.int32)
-    else:
-        kernel = _kernel_wr if root is not None else _kernel_plain
+    kernel_wr, kernel_plain = _KERNELS[family]
+    kernel = kernel_wr if root is not None else kernel_plain
+    if family == "legacy":
         out_specs = edge_spec
         out_shape = jax.ShapeDtypeStruct(ecol_p.shape, jnp.int32)
+    else:
+        out_specs = pl.BlockSpec((nr + 1,), lambda i: (0,))  # carried acc
+        out_shape = jax.ShapeDtypeStruct((nr + 1,), jnp.int32)
     out = pl.pallas_call(kernel, grid=grid, in_specs=in_specs,
                          out_specs=out_specs, out_shape=out_shape,
                          interpret=interpret)(*args)
-    return out if fused else out[:nnz]
+    return out[:nnz] if family == "legacy" else out
 
 
 def frontier_expand(ecol, cadj, bfs, root, rmatch, level, *,
@@ -246,7 +312,8 @@ def frontier_expand(ecol, cadj, bfs, root, rmatch, level, *,
     check_edge_geometry(int(ecol.shape[0]), block_edges)
     return _sweep_impl(ecol, cadj, bfs, root, rmatch, level,
                        block_edges=block_edges,
-                       interpret=resolve_interpret(interpret), fused=False)
+                       interpret=resolve_interpret(interpret),
+                       family="legacy")
 
 
 def frontier_expand_fused(ecol, cadj, bfs, root, rmatch, level, *,
@@ -267,12 +334,50 @@ def frontier_expand_fused(ecol, cadj, bfs, root, rmatch, level, *,
     check_edge_geometry(int(ecol.shape[0]), block_edges)
     interp = resolve_interpret(interpret)
     if not interp and jax.default_backend() != "tpu":
-        nr = rmatch.shape[0] - 1
-        prop = _sweep_impl(ecol, cadj, bfs, root, rmatch, level,
-                           block_edges=block_edges, interpret=False,
-                           fused=False)
-        rows = jnp.where(prop < IINF, cadj, jnp.int32(nr))
-        win = jnp.full(nr + 1, IINF, jnp.int32).at[rows].min(prop)
-        return win.at[nr].set(jnp.int32(IINF))
+        return _winner_via_legacy(ecol, cadj, bfs, root, rmatch, level,
+                                  block_edges=block_edges)
     return _sweep_impl(ecol, cadj, bfs, root, rmatch, level,
-                       block_edges=block_edges, interpret=interp, fused=True)
+                       block_edges=block_edges, interpret=interp,
+                       family="fused")
+
+
+def _winner_via_legacy(ecol, cadj, bfs, root, rmatch, level, *,
+                       block_edges: int):
+    """Parallel-grid (GPU/Triton) fallback keeping the winner contract:
+    legacy proposal kernel composed with an XLA min-scatter — the carried
+    accumulator needs a sequential grid, which only TPU (and the
+    interpreter) guarantee."""
+    nr = rmatch.shape[0] - 1
+    prop = _sweep_impl(ecol, cadj, bfs, root, rmatch, level,
+                       block_edges=block_edges, interpret=False,
+                       family="legacy")
+    rows = jnp.where(prop < IINF, cadj, jnp.int32(nr))
+    win = jnp.full(nr + 1, IINF, jnp.int32).at[rows].min(prop)
+    return win.at[nr].set(jnp.int32(IINF))
+
+
+def frontier_expand_pull(radj, erow, bfs, root, rmatch, level, *,
+                         block_edges: int = 4096,
+                         interpret: Optional[bool] = None):
+    """Pull-direction frontier sweep over the CSC mirror's row-sorted edges.
+
+    ``radj``/``erow`` are the column/row endpoints of ``DeviceCSR.with_csc``
+    (sentinels ``nc``/``nr``, same conventions as ``ecol``/``cadj``).
+    Returns the same ``(nr+1,)`` winner vector as
+    :func:`frontier_expand_fused` — the proposal predicate is per-edge and
+    min is the merge, so edge order cannot change the winners — but tiles
+    whose row range no longer contains unreached rows skip their in-VMEM
+    scatter entirely (see ``_merge_tile_pull``).
+
+    Like the fused family, the carried accumulator needs a sequential grid;
+    on non-TPU compiled backends the contract is kept by the legacy
+    proposal kernel + XLA min-scatter over the same (permuted) edge arrays.
+    """
+    check_edge_geometry(int(radj.shape[0]), block_edges)
+    interp = resolve_interpret(interpret)
+    if not interp and jax.default_backend() != "tpu":
+        return _winner_via_legacy(radj, erow, bfs, root, rmatch, level,
+                                  block_edges=block_edges)
+    return _sweep_impl(radj, erow, bfs, root, rmatch, level,
+                       block_edges=block_edges, interpret=interp,
+                       family="pull")

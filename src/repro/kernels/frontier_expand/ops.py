@@ -2,12 +2,16 @@
 
 ``frontier_expand``       — legacy per-edge proposal sweep (merge outside).
 ``frontier_expand_fused`` — fused sweep + in-kernel per-row winner merge.
+``frontier_expand_pull``  — pull sweep over the CSC mirror (row-sorted
+                            edges, tile-skipping merge, same winner
+                            contract as the fused family).
 ``resolve_interpret``     — the backend-based interpret auto-detection shared
                             with ``repro.matching`` (interpret only on CPU).
 """
 from __future__ import annotations
 
 from .frontier_expand import (frontier_expand, frontier_expand_fused,
-                              resolve_interpret)
+                              frontier_expand_pull, resolve_interpret)
 
-__all__ = ["frontier_expand", "frontier_expand_fused", "resolve_interpret"]
+__all__ = ["frontier_expand", "frontier_expand_fused",
+           "frontier_expand_pull", "resolve_interpret"]

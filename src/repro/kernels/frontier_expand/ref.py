@@ -39,3 +39,10 @@ def frontier_expand_fused_ref(ecol, cadj, bfs, root, rmatch, level):
     rows = jnp.where(prop < IINF, cadj, jnp.int32(nr))
     win = jnp.full(nr + 1, IINF, jnp.int32).at[rows].min(prop)
     return win.at[nr].set(IINF)
+
+
+def frontier_expand_pull_ref(radj, erow, bfs, root, rmatch, level):
+    """Pull-kernel oracle: the same min-merge over the row-sorted (CSC)
+    edge view — the proposal predicate is per-edge and min is the merge,
+    so this is definitionally the fused oracle on permuted arrays."""
+    return frontier_expand_fused_ref(radj, erow, bfs, root, rmatch, level)

@@ -73,9 +73,18 @@ class Matcher:
     def solve(self, graph: DeviceCSR, state: MatchState) -> MatchState:
         """Run the solver from ``state`` (pure; no warm start applied)."""
         self._check_state(graph, state)
-        cxadj = graph.cxadj if self.config.adaptive_frontier else None
+        kw = {}
+        if self.config.adaptive_frontier or self.config.dirop:
+            kw["cxadj"] = graph.cxadj
+        if self.config.dirop:
+            if not graph.has_csc:
+                raise ValueError(
+                    "MatcherConfig(dirop=True) needs the CSC mirror; build "
+                    "it once with graph.with_csc() (serving admission does "
+                    "this automatically for dirop configs)")
+            kw.update(rxadj=graph.rxadj, radj=graph.radj, erow=graph.erow)
         cm, rm, phases, fb = make_solver(self.config)(
-            graph.ecol, graph.cadj, state.cmatch, state.rmatch, cxadj=cxadj)
+            graph.ecol, graph.cadj, state.cmatch, state.rmatch, **kw)
         return MatchState(cmatch=cm, rmatch=rm,
                           phases=state.phases + phases,
                           fallbacks=state.fallbacks + fb)
@@ -127,6 +136,9 @@ class Matcher:
             # vmap turns the per-level lax.cond into a select: every graph
             # would run BOTH the dense and the compact sweep each level — a
             # strict pessimization, so refuse rather than quietly regress.
+            # (dirop is allowed through: the serving layer batches dirop
+            # requests and correctness is unaffected, but the same
+            # cond->select cost applies — see docs/architecture.md.)
             raise ValueError(
                 "adaptive_frontier composes with per-graph run() only; "
                 "under run_many's vmap both sweeps would execute each level")

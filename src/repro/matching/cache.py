@@ -65,8 +65,12 @@ def compile_cache_key(bucket_key: Tuple[int, ...], cfg, warm_start: str,
     concrete compilation mode first, so a program compiled in interpret mode
     can never be served where a compiled kernel was requested (and the other
     way around), and every execution-path knob (``use_pallas``,
-    ``pallas_fused``, ``pallas_block_edges``, ``adaptive_frontier``, ...)
-    lands in the key by being part of the frozen dataclass.
+    ``pallas_fused``, ``pallas_block_edges``, ``adaptive_frontier``,
+    ``dirop`` + its heuristic/geometry fields, ...) lands in the key by
+    being part of the frozen dataclass.  ``bucket_key`` additionally carries
+    the CSC-mirror marker (``DeviceCSR.bucket_key`` appends ``"csc"``), so a
+    mirrored graph — different pytree leaves, different traced program —
+    never shares an entry with a bare one.
     """
     return (bucket_key, cfg, warm_start, entry)
 

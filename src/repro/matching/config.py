@@ -10,10 +10,13 @@ class MatcherConfig:
     """One of the paper's eight variants (2 algos x 2 BFS kernels x 2
     schedules), plus the frontier-sweep execution knobs.
 
-    The sweep knobs (``use_pallas`` .. ``compact_dmax``) select *how* the
-    O(nnz) per-level frontier expansion runs; they never change the matching
+    The sweep knobs (``use_pallas`` .. ``pull_dmax``) select *how* the
+    per-level frontier expansion runs; they never change the matching
     the solver returns — every path is bit-identical to the deterministic
-    min-merge semantics (asserted in tests/test_frontier_paths.py).
+    min-merge semantics (asserted in tests/test_frontier_paths.py).  All of
+    them are fields of this frozen dataclass, so every one lands in the
+    compile-cache key by construction — there are no untracked execution
+    knobs hiding in kwarg defaults.
     """
 
     algo: str = "apfb"          # "apfb" (HKDW-like) | "apsb" (HK-like)
@@ -44,13 +47,37 @@ class MatcherConfig:
     # column-gather sweep (O(cap * dmax) instead of O(nnz)) whenever the
     # frontier fits `compact_cap` columns of degree <= `compact_dmax`;
     # falls back to the full sweep at runtime otherwise, so results stay
-    # bit-identical.  0 = auto-size to the bucket (cap = nc/8 clamped to
-    # [64, 1024], dmax = 8) so the compact sweep stays well under the dense
-    # O(nnz) cost.  Single-device only (the sharded path keeps the dense
-    # per-shard sweep + one pmin).
+    # bit-identical.  0 = auto-size to the bucket (resolve_cap/resolve_dmax
+    # below — the ONE definition of the auto geometry; solve.make_solver
+    # resolves per bucket, a pure function of (config, bucket) so the 0
+    # marker in the compile-cache key is unambiguous).  Single-device only
+    # (the sharded path keeps the dense per-shard sweep + one pmin).
     adaptive_frontier: bool = False
     compact_cap: int = 0
     compact_dmax: int = 0
+    # -- beyond-paper: direction-optimizing frontier engine (default off) ---
+    # Beamer-style push/pull switching per BFS level, in-jit: estimate the
+    # frontier's outgoing edges (push work actually useful) against the
+    # unreached rows' incoming edges (pull work) and `lax.cond`-dispatch a
+    # pull sweep over the CSC mirror (`DeviceCSR.with_csc`) when
+    #     frontier_edges * dirop_alpha > pull_edges,
+    # staying in pull — hysteresis — while
+    #     frontier_edges * dirop_beta  > pull_edges   (beta > alpha).
+    # On the jnp path the pull sweep is a compact row-gather of
+    # O(pull_cap * pull_dmax) (0 = auto, same resolution rule as the
+    # compact push geometry but sized on nr) and additionally requires the
+    # unreached rows to fit that geometry; on the Pallas path it is the
+    # streaming `frontier_expand_pull` kernel (row-sorted tiles whose merge
+    # skips when the tile proposes nothing).  Either way the winners are
+    # bit-identical to the push sweeps, so the dispatch never changes the
+    # matching.  Composes with ShardedMatcher (per-shard pull over the CSC
+    # shard, the one per-level pmin unchanged).  Mutually exclusive with
+    # `adaptive_frontier`, which it generalizes.
+    dirop: bool = False
+    dirop_alpha: float = 8.0
+    dirop_beta: float = 32.0
+    pull_cap: int = 0
+    pull_dmax: int = 0
 
     def __post_init__(self):
         assert self.algo in ("apfb", "apsb")
@@ -61,6 +88,26 @@ class MatcherConfig:
         assert self.pallas_block_edges >= 0, self.pallas_block_edges
         assert self.compact_cap >= 0 and self.compact_dmax >= 0, \
             (self.compact_cap, self.compact_dmax)
+        assert self.pull_cap >= 0 and self.pull_dmax >= 0, \
+            (self.pull_cap, self.pull_dmax)
+        assert self.dirop_alpha > 0 and self.dirop_beta >= self.dirop_alpha, \
+            ("hysteresis needs 0 < dirop_alpha <= dirop_beta",
+             self.dirop_alpha, self.dirop_beta)
+        if self.dirop and self.adaptive_frontier:
+            raise ValueError(
+                "dirop generalizes adaptive_frontier; enable one, not both")
+
+    @staticmethod
+    def resolve_cap(auto_or_value: int, n: int) -> int:
+        """The 0 = auto capacity rule for the compact sweeps: n/8 clamped to
+        [64, 1024] (well under any dense O(nnz) sweep).  ``n`` is nc for the
+        push-compact gather, nr for the pull gather."""
+        return auto_or_value or max(64, min(1024, n // 8))
+
+    @staticmethod
+    def resolve_dmax(auto_or_value: int) -> int:
+        """The 0 = auto per-vertex degree bound of the compact sweeps."""
+        return auto_or_value or 8
 
     @property
     def name(self) -> str:

@@ -12,6 +12,17 @@ Size-bucket helpers (:meth:`DeviceCSR.pad_to`, :func:`bucket_nnz`) round the
 edge capacity up to a small set of shapes so the compile cache stays bounded,
 and :meth:`DeviceCSR.stack` builds the batched bucket consumed by
 :func:`repro.matching.match_many`.
+
+A graph may additionally carry a **CSC mirror** (:meth:`DeviceCSR.with_csc`):
+the row-major twin ``rxadj``/``radj`` plus the edge-parallel ``erow`` view and
+the permutation ``eperm`` mapping each row-sorted edge back to its CSR slot.
+The mirror is what the direction-optimizing pull sweep
+(``MatcherConfig(dirop=True)``) gathers over; it is lazily built, stays
+``None`` by default (zero cost for push-only workloads), and is threaded
+through every shape operation (``pad_to``/``pad_vertices``/``bucketed``/
+``stack``/``shard``) so an admitted serving graph keeps it.  Presence is part
+of :attr:`bucket_key` — a mirrored graph compiles a different program than a
+bare one, and the cache must see that.
 """
 from __future__ import annotations
 
@@ -51,6 +62,12 @@ class DeviceCSR:
 
     Data leaves (batchable): ``cxadj`` (nc+1,), ``cadj``/``ecol``
     (nnz_pad,), ``nnz`` scalar int32.  Static metadata: ``nc``, ``nr``.
+
+    Optional CSC mirror leaves (all present or all ``None``, see
+    :meth:`with_csc`): ``rxadj`` (nr+1,) row offsets into the row-sorted edge
+    list, ``radj``/``erow`` (nnz_pad,) column/row endpoints in row-sorted
+    order, ``eperm`` (nnz_pad,) the CSR position of each row-sorted edge.
+    Sentinel conventions match the CSR side (``radj = nc``, ``erow = nr``).
     """
 
     cxadj: jax.Array
@@ -59,6 +76,10 @@ class DeviceCSR:
     nnz: jax.Array
     nc: int = dataclasses.field(metadata=dict(static=True))
     nr: int = dataclasses.field(metadata=dict(static=True))
+    rxadj: Optional[jax.Array] = None
+    radj: Optional[jax.Array] = None
+    erow: Optional[jax.Array] = None
+    eperm: Optional[jax.Array] = None
 
     # -- shape/bucket introspection ------------------------------------------
     @property
@@ -70,9 +91,19 @@ class DeviceCSR:
         return tuple(self.cadj.shape[:-1])
 
     @property
-    def bucket_key(self) -> Tuple[int, ...]:
-        """The compile-relevant shape: (*batch, nc, nr, nnz_pad)."""
-        return self.batch_shape + (self.nc, self.nr, self.nnz_pad)
+    def has_csc(self) -> bool:
+        return self.rxadj is not None
+
+    @property
+    def bucket_key(self) -> Tuple:
+        """The compile-relevant shape: (*batch, nc, nr, nnz_pad[, "csc"]).
+
+        The mirror marker matters: a mirrored graph has extra pytree leaves,
+        so the traced program differs and the compile cache (and the serving
+        warmup grid) must key on its presence.
+        """
+        key = self.batch_shape + (self.nc, self.nr, self.nnz_pad)
+        return key + ("csc",) if self.has_csc else key
 
     # -- host <-> device ------------------------------------------------------
     @classmethod
@@ -101,6 +132,34 @@ class DeviceCSR:
                             cadj=np.asarray(self.cadj),
                             ecol=np.asarray(self.ecol))
 
+    # -- the CSC mirror -------------------------------------------------------
+    def with_csc(self) -> "DeviceCSR":
+        """Attach the row-major mirror (no-op if already present).
+
+        One stable ``argsort`` over the edge list: padding edges carry
+        ``cadj = nr`` so they sort to the tail and stay inert sentinels in
+        the mirror too (``radj = nc``, ``erow = nr``).  ``rxadj[r]`` is the
+        first row-sorted slot of row ``r`` and ``rxadj[nr]`` the true edge
+        count; ``eperm`` maps each row-sorted slot back to its CSR position
+        (identity on the sentinel tail).  Build it *before* ``stack`` or
+        ``shard`` — the mirror then rides every later shape operation.
+        """
+        if self.has_csc:
+            return self
+        assert not self.batch_shape, \
+            "with_csc() takes a single graph; build the mirror before stack()"
+        order = jnp.argsort(self.cadj, stable=True).astype(jnp.int32)
+        erow = self.cadj[order]
+        rxadj = jnp.searchsorted(
+            erow, jnp.arange(self.nr + 1, dtype=jnp.int32)).astype(jnp.int32)
+        return dataclasses.replace(self, rxadj=rxadj, radj=self.ecol[order],
+                                   erow=erow, eperm=order)
+
+    def drop_csc(self) -> "DeviceCSR":
+        """Return the bare graph (the mirror leaves removed)."""
+        return dataclasses.replace(self, rxadj=None, radj=None, erow=None,
+                                   eperm=None)
+
     # -- bucketing ------------------------------------------------------------
     def pad_to(self, nnz_pad: int) -> "DeviceCSR":
         """Grow the edge capacity on device (sentinel-fill the new slots)."""
@@ -114,7 +173,23 @@ class DeviceCSR:
             [self.cadj, jnp.full(pad_shape, self.nr, jnp.int32)], axis=-1)
         ecol = jnp.concatenate(
             [self.ecol, jnp.full(pad_shape, self.nc, jnp.int32)], axis=-1)
-        return dataclasses.replace(self, cadj=cadj, ecol=ecol)
+        g = dataclasses.replace(self, cadj=cadj, ecol=ecol)
+        if self.has_csc:
+            # mirror sentinels live at the tail too; new slots map to the new
+            # CSR tail slots (identity), keeping eperm a true permutation
+            tail = cur + jnp.arange(extra, dtype=jnp.int32)
+            g = dataclasses.replace(
+                g,
+                radj=jnp.concatenate(
+                    [self.radj, jnp.full(pad_shape, self.nc, jnp.int32)],
+                    axis=-1),
+                erow=jnp.concatenate(
+                    [self.erow, jnp.full(pad_shape, self.nr, jnp.int32)],
+                    axis=-1),
+                eperm=jnp.concatenate(
+                    [self.eperm,
+                     jnp.broadcast_to(tail, pad_shape)], axis=-1))
+        return g
 
     def bucketed(self, lane: int = LANE) -> "DeviceCSR":
         """Round the edge capacity up to the canonical power-of-two bucket."""
@@ -141,8 +216,21 @@ class DeviceCSR:
                 [cxadj, jnp.broadcast_to(cxadj[-1:], (nc - self.nc,))])
         cadj = jnp.where(self.cadj == self.nr, jnp.int32(nr), self.cadj)
         ecol = jnp.where(self.ecol == self.nc, jnp.int32(nc), self.ecol)
-        return dataclasses.replace(self, cxadj=cxadj, cadj=cadj, ecol=ecol,
-                                   nc=nc, nr=nr)
+        g = dataclasses.replace(self, cxadj=cxadj, cadj=cadj, ecol=ecol,
+                                nc=nc, nr=nr)
+        if self.has_csc:
+            rxadj = self.rxadj
+            if nr > self.nr:
+                # new rows are edgeless: offsets repeat the true edge count
+                rxadj = jnp.concatenate(
+                    [rxadj, jnp.broadcast_to(rxadj[-1:], (nr - self.nr,))])
+            g = dataclasses.replace(
+                g, rxadj=rxadj,
+                radj=jnp.where(self.radj == self.nc, jnp.int32(nc),
+                               self.radj),
+                erow=jnp.where(self.erow == self.nr, jnp.int32(nr),
+                               self.erow))
+        return g
 
     # -- multi-device sharding ------------------------------------------------
     def shard(self, mesh, axis: str = "data") -> "DeviceCSR":
@@ -168,12 +256,26 @@ class DeviceCSR:
             else self.pad_to(ndev * per_shard)
         edges = NamedSharding(mesh, P(axis))
         rep = NamedSharding(mesh, P())
-        return dataclasses.replace(
+        g = dataclasses.replace(
             g,
             ecol=jax.device_put(g.ecol, edges),
             cadj=jax.device_put(g.cadj, edges),
             cxadj=jax.device_put(g.cxadj, rep),
             nnz=jax.device_put(g.nnz, rep))
+        if g.has_csc:
+            # the row-sorted edge list shards 1-D like the CSR one: each
+            # device owns a contiguous *row range* of the mirror (rows are
+            # sorted), which is exactly what the per-shard pull sweep wants;
+            # the O(n) offsets stay replicated.  Shard boundaries need not
+            # align with the CSR shards — any edge partition min-merged with
+            # the same per-level pmin yields the same winners.
+            g = dataclasses.replace(
+                g,
+                radj=jax.device_put(g.radj, edges),
+                erow=jax.device_put(g.erow, edges),
+                eperm=jax.device_put(g.eperm, edges),
+                rxadj=jax.device_put(g.rxadj, rep))
+        return g
 
     # -- batching -------------------------------------------------------------
     @staticmethod
@@ -181,6 +283,8 @@ class DeviceCSR:
         """Stack same-bucket graphs into one batched DeviceCSR (for vmap)."""
         assert graphs, "empty graph batch"
         g0 = graphs[0]
+        assert len({g.has_csc for g in graphs}) == 1, \
+            "cannot stack mirrored and bare graphs; with_csc() all or none"
         cap = max(g.nnz_pad for g in graphs)
         graphs = [g.pad_to(cap) for g in graphs]
         for g in graphs:

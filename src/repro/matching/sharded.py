@@ -82,7 +82,9 @@ class ShardedMatcher(Matcher):
         if self.config.adaptive_frontier:
             raise ValueError(
                 "adaptive_frontier is single-device only; ShardedMatcher "
-                "keeps the dense per-shard sweep + one pmin per level")
+                "keeps the dense per-shard sweep + one pmin per level "
+                "(use MatcherConfig(dirop=True) for a direction heuristic "
+                "that composes with sharding)")
         assert axis in mesh.axis_names, (axis, mesh.axis_names)
         self.mesh = mesh
         self.axis = axis
@@ -98,6 +100,11 @@ class ShardedMatcher(Matcher):
         """
         assert not graph.batch_shape, \
             "ShardedMatcher.run takes a single (edge-sharded) graph"
+        if self.config.dirop and not graph.has_csc:
+            raise ValueError(
+                "MatcherConfig(dirop=True) needs the CSC mirror; call "
+                "graph.with_csc() before .shard() — the mirror shards with "
+                "the graph")
         graph = graph.shard(self.mesh, self.axis)
         cold = state is None
         if cold:
@@ -106,12 +113,18 @@ class ShardedMatcher(Matcher):
         key = compile_cache_key(
             graph.bucket_key, self.config, ws,
             ("sharded_run",) + mesh_cache_key(self.mesh, self.axis))
+        dirop = self.config.dirop
 
         def build():
             solve = make_solver(self.config, axis=self.axis)
+            # dirop extends the solver args with the column offsets and the
+            # CSC mirror: O(n) offsets replicated, the row-sorted edge
+            # arrays 1-D sharded exactly like the CSR ones
+            in_specs = (P(self.axis), P(self.axis), P(), P())
+            if dirop:
+                in_specs += (P(), P(), P(self.axis), P(self.axis))
             smap = shard_map_no_check(
-                solve, self.mesh,
-                in_specs=(P(self.axis), P(self.axis), P(), P()),
+                solve, self.mesh, in_specs=in_specs,
                 out_specs=(P(), P(), P(), P()))
             init = get_warm_start(self.warm_start)
 
@@ -120,7 +133,8 @@ class ShardedMatcher(Matcher):
                 cm, rm = s.cmatch, s.rmatch
                 if cold:
                     cm, rm = init(g.ecol, g.cadj, cm, rm)
-                cm, rm, phases, fb = smap(g.ecol, g.cadj, cm, rm)
+                extra = ((g.cxadj, g.rxadj, g.radj, g.erow) if dirop else ())
+                cm, rm, phases, fb = smap(g.ecol, g.cadj, cm, rm, *extra)
                 return MatchState(cmatch=cm, rmatch=rm,
                                   phases=s.phases + phases,
                                   fallbacks=s.fallbacks + fb)

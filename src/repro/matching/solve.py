@@ -17,6 +17,16 @@ level is a single *edge-parallel* vector operation over all ``nnz`` edges:
   and swaps the dense O(nnz) sweep for a compact column-gather sweep
   (O(cap·dmax)) whenever the frontier is small enough, with a runtime
   fallback that keeps the result bit-identical;
+* beyond-paper, ``dirop`` is the direction-optimizing engine: each level a
+  Beamer-style heuristic compares the frontier's outgoing-edge count
+  against the unreached rows' incoming-edge count (both O(n) degree sums
+  off ``cxadj``/``rxadj``) and ``lax.cond``-dispatches either the push
+  sweep or a *pull* sweep over the CSC mirror — a compact row-gather
+  (O(cap·dmax)) on the jnp path, the tile-skipping
+  ``frontier_expand_pull`` kernel on the Pallas path.  The proposal
+  predicate factors into a column side and a row side, so pull and push
+  enumerate the same proposals and the min-merge winner is bit-identical
+  whichever direction ran — the heuristic is a pure performance decision;
 * ``ALTERNATE`` (Alg. 3) walks all augmenting paths in lock-step inside a
   ``lax.while_loop``; the paper's line-8 predecessor check is a vector mask;
 * ``FIXMATCHING`` is the paper's repair pass, applied in both directions so
@@ -128,6 +138,69 @@ def _proposal_mask(ecol, cadj, bfs, root, rmatch, level):
     return _proposals(level, ecol, cadj, bfs, root, rmatch)
 
 
+def _unreached_rows(bfs, rmatch):
+    """The (nr,) mask of rows still reachable this phase — the row side of
+    the proposal predicate: unmatched-and-not-yet-endpoint rows, or rows
+    whose matched column is still UNVISITED.  Winners are IINF everywhere
+    else, which is what makes a pull sweep restricted to these rows exact.
+    """
+    nc = bfs.shape[0] - 1
+    rm = rmatch[:-1]
+    return (rm == -1) | ((rm >= 0) & (bfs[jnp.clip(rm, 0, nc)] == UNVISITED))
+
+
+def _winner_pull_compact(rxadj, radj, bfs, root, rmatch, level, nr,
+                         unreached, *, cap: int, dmax: int):
+    """Compact pull sweep: gather the unreached rows' adjacency via the CSC
+    mirror, O(cap·dmax) instead of O(nnz).
+
+    ``unreached`` is :func:`_unreached_rows` (passed in, not recomputed —
+    XLA cannot CSE across the ``lax.cond`` boundary).  Only called when the
+    eligibility guard holds (every unreached row gathered, every of its
+    edges scanned), in which case each row's min over its proposing columns
+    is exactly the dense sweep's min-merge winner — bit-identical.
+    """
+    nc = bfs.shape[0] - 1
+    nnz_pad = radj.shape[0]
+    # the column side of the proposal predicate, for every column at once
+    colok = bfs == level                                         # (nc+1,)
+    if root is not None:
+        colok &= bfs[jnp.clip(root, 0, nc)] >= UNVISITED
+    rows = jnp.nonzero(unreached, size=cap, fill_value=nr)[0]    # (cap,)
+    starts = rxadj[jnp.minimum(rows, nr)]
+    ends = rxadj[jnp.minimum(rows + 1, nr)]                      # fill -> deg 0
+    offs = jnp.arange(dmax, dtype=jnp.int32)
+    eidx = starts[:, None] + offs[None, :]                       # (cap, dmax)
+    valid = offs[None, :] < (ends - starts)[:, None]
+    cols = jnp.where(valid, radj[jnp.clip(eidx, 0, nnz_pad - 1)],
+                     jnp.int32(nc))
+    ok = valid & colok[cols]               # colok[nc] is False (bfs NEG)
+    win_rows = jnp.min(jnp.where(ok, cols, IINF), axis=1)        # (cap,)
+    return scatter_min(nr, jnp.minimum(rows, nr), win_rows)
+
+
+def _winner_pull_stream(radj, erow, bfs, root, rmatch, level, nr, *,
+                        use_pallas: bool, block_edges: int,
+                        interpret: Optional[bool]):
+    """Streaming pull sweep over the (possibly sharded) CSC edge list.
+
+    On the Pallas path this is ``frontier_expand_pull`` — row-sorted tiles
+    whose in-VMEM merge skips when the tile proposes nothing.  The jnp form
+    is the dense sweep on the permuted arrays (no asymptotic win — it
+    exists so the sharded jnp path can follow the same direction decision
+    with bit-identical winners).
+    """
+    if use_pallas:
+        from repro.kernels.frontier_expand.ops import frontier_expand_pull
+        return frontier_expand_pull(radj, erow, bfs, root, rmatch, level,
+                                    block_edges=block_edges,
+                                    interpret=interpret)
+    target = _proposal_mask(radj, erow, bfs, root, rmatch, level)
+    prop = jnp.where(target, radj, IINF)
+    row_ix = jnp.where(target, erow, nr)
+    return scatter_min(nr, row_ix, prop)
+
+
 def _winner_compact(cxadj, cadj, bfs, rmatch, nr, isf, *,
                     cap: int, dmax: int):
     """Compact column-gather sweep: O(cap·dmax) instead of O(nnz).
@@ -157,57 +230,13 @@ def _winner_compact(cxadj, cadj, bfs, rmatch, nr, isf, *,
     return scatter_min(nr, rows_ix.ravel(), prop.ravel())
 
 
-def _expand_level(ecol, cadj, bfs, root, pred, rmatch, level, *, wr: bool,
-                  wr_exact: bool, use_pallas: bool, block_edges: int,
-                  axis: Optional[str] = None, pallas_fused: bool = True,
-                  interpret: Optional[bool] = None, cxadj=None,
-                  adaptive: bool = False, compact_cap: int = 512,
-                  compact_dmax: int = 32):
-    """One level-synchronous frontier expansion. Returns updated state.
-
-    Edge-parallel: every edge (c, r) is one lane.  The per-row conflict
-    (several frontier columns reaching the same row) is resolved with a
-    deterministic min-merge, standing in for the paper's benign race — fused
-    into the Pallas kernel on the default Pallas path, a separate scatter on
-    the jnp and legacy paths.
-
-    With ``axis`` set (inside ``shard_map``), ``ecol``/``cadj`` are this
-    device's edge shard and the per-row winners of all shards merge with one
-    ``lax.pmin`` over the mesh axis — the single collective any
-    level-synchronous distributed BFS needs.  Everything after the merge
-    operates on replicated O(n) state and is bit-identical on every device.
-
-    ``adaptive`` (requires ``cxadj``, single-device) sizes the frontier each
-    level and dispatches the compact column-gather sweep when it fits.
-    """
+def _apply_winner(winner, bfs, root, pred, rmatch, level, *, wr: bool,
+                  wr_exact: bool):
+    """Fold a per-row winner vector into the BFS state (the paper's Alg. 2
+    lines 8-17 / Alg. 4 lines 11-18).  Shared by every sweep direction —
+    once the winners agree, everything downstream is identical."""
     nc = bfs.shape[0] - 1
     nr = pred.shape[0] - 1
-    rt = root if wr else None
-
-    def full(_):
-        return _winner_full(ecol, cadj, bfs, rt, rmatch, level, nr,
-                            use_pallas=use_pallas, pallas_fused=pallas_fused,
-                            block_edges=block_edges, interpret=interpret)
-
-    if adaptive:
-        assert cxadj is not None, "adaptive_frontier needs the cxadj offsets"
-        assert axis is None, "adaptive_frontier is single-device only"
-        isf = bfs[:-1] == level
-        if wr:
-            isf &= bfs[jnp.clip(root[:-1], 0, nc)] >= UNVISITED
-        deg = cxadj[1:] - cxadj[:-1]
-        eligible = ((jnp.sum(isf.astype(jnp.int32)) <= compact_cap)
-                    & (jnp.max(jnp.where(isf, deg, 0)) <= compact_dmax))
-        winner = jax.lax.cond(
-            eligible,
-            lambda _: _winner_compact(cxadj, cadj, bfs, rmatch, nr, isf,
-                                      cap=compact_cap, dmax=compact_dmax),
-            full, None)
-    else:
-        winner = full(None)
-
-    if axis is not None:                                  # merge edge shards
-        winner = jax.lax.pmin(winner, axis)
     upd_r = winner < IINF                                 # (nr+1,) rows reached
 
     pred = jnp.where(upd_r, winner, pred)
@@ -235,6 +264,133 @@ def _expand_level(ecol, cadj, bfs, root, pred, rmatch, level, *, wr: bool,
     vertex_inserted = jnp.any(visit_r)
     aug_found = jnp.any(end_r)
     return bfs, root, pred, rmatch, vertex_inserted, aug_found
+
+
+def _expand_level(ecol, cadj, bfs, root, pred, rmatch, level, *, wr: bool,
+                  wr_exact: bool, use_pallas: bool, block_edges: int,
+                  axis: Optional[str] = None, pallas_fused: bool = True,
+                  interpret: Optional[bool] = None, cxadj=None,
+                  adaptive: bool = False, compact_cap: int = 0,
+                  compact_dmax: int = 0):
+    """One level-synchronous frontier expansion. Returns updated state.
+
+    Edge-parallel: every edge (c, r) is one lane.  The per-row conflict
+    (several frontier columns reaching the same row) is resolved with a
+    deterministic min-merge, standing in for the paper's benign race — fused
+    into the Pallas kernel on the default Pallas path, a separate scatter on
+    the jnp and legacy paths.
+
+    With ``axis`` set (inside ``shard_map``), ``ecol``/``cadj`` are this
+    device's edge shard and the per-row winners of all shards merge with one
+    ``lax.pmin`` over the mesh axis — the single collective any
+    level-synchronous distributed BFS needs.  Everything after the merge
+    operates on replicated O(n) state and is bit-identical on every device.
+
+    ``adaptive`` (requires ``cxadj``, single-device) sizes the frontier each
+    level and dispatches the compact column-gather sweep when it fits; the
+    compact geometry must be resolved through ``MatcherConfig`` (0 = not
+    resolved is an error here — there is no untracked default).
+    """
+    nc = bfs.shape[0] - 1
+    nr = pred.shape[0] - 1
+    rt = root if wr else None
+
+    def full(_):
+        return _winner_full(ecol, cadj, bfs, rt, rmatch, level, nr,
+                            use_pallas=use_pallas, pallas_fused=pallas_fused,
+                            block_edges=block_edges, interpret=interpret)
+
+    if adaptive:
+        assert cxadj is not None, "adaptive_frontier needs the cxadj offsets"
+        assert axis is None, "adaptive_frontier is single-device only"
+        assert compact_cap > 0 and compact_dmax > 0, \
+            "resolve the compact geometry via MatcherConfig.resolve_cap/" \
+            "resolve_dmax (0 means unresolved, not a default)"
+        isf = bfs[:-1] == level
+        if wr:
+            isf &= bfs[jnp.clip(root[:-1], 0, nc)] >= UNVISITED
+        deg = cxadj[1:] - cxadj[:-1]
+        eligible = ((jnp.sum(isf.astype(jnp.int32)) <= compact_cap)
+                    & (jnp.max(jnp.where(isf, deg, 0)) <= compact_dmax))
+        winner = jax.lax.cond(
+            eligible,
+            lambda _: _winner_compact(cxadj, cadj, bfs, rmatch, nr, isf,
+                                      cap=compact_cap, dmax=compact_dmax),
+            full, None)
+    else:
+        winner = full(None)
+
+    if axis is not None:                                  # merge edge shards
+        winner = jax.lax.pmin(winner, axis)
+    return _apply_winner(winner, bfs, root, pred, rmatch, level, wr=wr,
+                         wr_exact=wr_exact)
+
+
+def _expand_level_dirop(ecol, cadj, cxadj, rxadj, radj, erow, bfs, root,
+                        pred, rmatch, level, dir_prev, *, wr: bool,
+                        wr_exact: bool, use_pallas: bool, block_edges: int,
+                        axis: Optional[str], pallas_fused: bool,
+                        interpret: Optional[bool], dirop_alpha: float,
+                        dirop_beta: float, pull_cap: int, pull_dmax: int):
+    """Direction-optimizing frontier expansion (Beamer-style, in-jit).
+
+    Estimates both directions' work from O(n) degree sums — the frontier
+    columns' outgoing edges (``fe``, what a push sweep usefully does)
+    against the unreached rows' incoming edges (``pe``, what a pull sweep
+    must scan) — and ``lax.cond``-dispatches:
+
+    * pull when ``fe * dirop_alpha > pe``;
+    * once pulling, keep pulling while ``fe * dirop_beta > pe`` (the
+      hysteresis band, ``beta > alpha`` — ``dir_prev`` carries the previous
+      level's direction through the BFS loop);
+    * the jnp pull is the compact row-gather and additionally requires the
+      unreached rows to fit its (cap, dmax) geometry; the Pallas pull and
+      the sharded path stream the CSC mirror, no geometry constraint.
+
+    Either branch produces the dense sweep's exact winner vector, so the
+    decision is invisible in the matching; with ``axis`` set the usual one
+    ``lax.pmin`` merges the per-shard winners, whichever direction each
+    level ran (the estimates are computed from replicated state, so every
+    shard takes the same branch).  Returns the updated state plus this
+    level's direction for the next level's hysteresis.
+    """
+    nc = bfs.shape[0] - 1
+    nr = pred.shape[0] - 1
+    rt = root if wr else None
+
+    def full(_):
+        return _winner_full(ecol, cadj, bfs, rt, rmatch, level, nr,
+                            use_pallas=use_pallas, pallas_fused=pallas_fused,
+                            block_edges=block_edges, interpret=interpret)
+
+    isf = bfs[:-1] == level
+    if wr:
+        isf &= bfs[jnp.clip(root[:-1], 0, nc)] >= UNVISITED
+    cdeg = cxadj[1:] - cxadj[:-1]
+    fe = jnp.sum(jnp.where(isf, cdeg, 0)).astype(jnp.float32)
+    unreached = _unreached_rows(bfs, rmatch)
+    rdeg = rxadj[1:] - rxadj[:-1]
+    pe = jnp.sum(jnp.where(unreached, rdeg, 0)).astype(jnp.float32)
+
+    use_pull = (fe * dirop_alpha > pe) | (dir_prev & (fe * dirop_beta > pe))
+    if axis is None and not use_pallas:
+        # compact pull: every unreached row must be gathered in full
+        fits = ((jnp.sum(unreached.astype(jnp.int32)) <= pull_cap)
+                & (jnp.max(jnp.where(unreached, rdeg, 0)) <= pull_dmax))
+        use_pull &= fits
+        pull = lambda _: _winner_pull_compact(  # noqa: E731
+            rxadj, radj, bfs, rt, rmatch, level, nr, unreached,
+            cap=pull_cap, dmax=pull_dmax)
+    else:
+        pull = lambda _: _winner_pull_stream(   # noqa: E731
+            radj, erow, bfs, rt, rmatch, level, nr, use_pallas=use_pallas,
+            block_edges=block_edges, interpret=interpret)
+
+    winner = jax.lax.cond(use_pull, pull, full, None)
+    if axis is not None:                                  # merge edge shards
+        winner = jax.lax.pmin(winner, axis)
+    return _apply_winner(winner, bfs, root, pred, rmatch, level, wr=wr,
+                         wr_exact=wr_exact) + (use_pull,)
 
 
 # ---------------------------------------------------------------------------
@@ -344,25 +500,40 @@ def make_solver(cfg: MatcherConfig, axis: Optional[str] = None):
 
     ``cfg.adaptive_frontier`` additionally needs the ``cxadj`` offsets
     (pass ``match_fn(..., cxadj=graph.cxadj)``) and is single-device only.
+    ``cfg.dirop`` needs ``cxadj`` plus the CSC mirror arrays
+    (``rxadj``/``radj``/``erow`` of ``DeviceCSR.with_csc``); it composes
+    with ``axis`` — each shard pulls over its own CSC slice and the same
+    single ``pmin`` merges the winners.
     """
     wr = cfg.kernel == "gpubfs_wr"
     if cfg.adaptive_frontier and axis is not None:
         raise ValueError(
             "adaptive_frontier composes with the dense per-shard sweep only; "
-            "disable it for ShardedMatcher (axis=%r)" % (axis,))
+            "disable it for ShardedMatcher (axis=%r); dirop is the "
+            "direction heuristic that does compose with sharding" % (axis,))
 
-    def match_fn(ecol, cadj, cmatch, rmatch, cxadj=None):
+    def match_fn(ecol, cadj, cmatch, rmatch, cxadj=None, rxadj=None,
+                 radj=None, erow=None):
         if cfg.adaptive_frontier and cxadj is None:
             raise ValueError(
                 "adaptive_frontier needs the cxadj column offsets; call the "
                 "solver with cxadj= (Matcher.solve passes graph.cxadj)")
+        if cfg.dirop and (cxadj is None or rxadj is None or radj is None
+                          or erow is None):
+            raise ValueError(
+                "dirop needs cxadj plus the CSC mirror (rxadj/radj/erow); "
+                "build it with DeviceCSR.with_csc() — Matcher.solve passes "
+                "it through when present")
         nc = cmatch.shape[0] - 1
         nr = rmatch.shape[0] - 1
         block_edges = cfg.pallas_block_edges or default_block_edges(
             int(ecol.shape[0]), cfg.schedule)
-        # auto compact geometry: keep the compact sweep well under O(nnz)
-        compact_cap = cfg.compact_cap or max(64, min(1024, nc // 8))
-        compact_dmax = cfg.compact_dmax or 8
+        # compact/pull geometry: the ONE auto rule lives on MatcherConfig
+        # (pure in (config, bucket), so the 0 marker in cache keys is safe)
+        compact_cap = cfg.resolve_cap(cfg.compact_cap, nc)
+        compact_dmax = cfg.resolve_dmax(cfg.compact_dmax)
+        pull_cap = cfg.resolve_cap(cfg.pull_cap, nr)
+        pull_dmax = cfg.resolve_dmax(cfg.pull_dmax)
 
         def phase_bfs(cmatch, rmatch):
             """Inner while of Alg. 1: level-synchronous BFS to exhaustion/first hit."""
@@ -370,7 +541,7 @@ def make_solver(cfg: MatcherConfig, axis: Optional[str] = None):
             pred = jnp.full(nr + 1, jnp.int32(nc), jnp.int32)   # fresh each phase
 
             def cond(c):
-                _, _, _, _, level, ins, aug, aug_lvl = c
+                _, _, _, _, level, ins, aug, aug_lvl, _ = c
                 go = ins
                 if cfg.algo == "apsb":
                     go = go & ~aug                               # Alg.1 l.9-10 break
@@ -381,23 +552,36 @@ def make_solver(cfg: MatcherConfig, axis: Optional[str] = None):
                 return go
 
             def body(c):
-                bfs, root, pred, rmatch, level, _, aug, aug_lvl = c
-                bfs, root, pred, rmatch, ins, aug_l = _expand_level(
-                    ecol, cadj, bfs, root, pred, rmatch, level, wr=wr,
-                    wr_exact=cfg.wr_exact, use_pallas=cfg.use_pallas,
-                    block_edges=block_edges, axis=axis,
-                    pallas_fused=cfg.pallas_fused,
-                    interpret=cfg.pallas_interpret, cxadj=cxadj,
-                    adaptive=cfg.adaptive_frontier,
-                    compact_cap=compact_cap,
-                    compact_dmax=compact_dmax)
+                bfs, root, pred, rmatch, level, _, aug, aug_lvl, dirp = c
+                if cfg.dirop:
+                    bfs, root, pred, rmatch, ins, aug_l, dirp = \
+                        _expand_level_dirop(
+                            ecol, cadj, cxadj, rxadj, radj, erow, bfs, root,
+                            pred, rmatch, level, dirp, wr=wr,
+                            wr_exact=cfg.wr_exact, use_pallas=cfg.use_pallas,
+                            block_edges=block_edges, axis=axis,
+                            pallas_fused=cfg.pallas_fused,
+                            interpret=cfg.pallas_interpret,
+                            dirop_alpha=cfg.dirop_alpha,
+                            dirop_beta=cfg.dirop_beta,
+                            pull_cap=pull_cap, pull_dmax=pull_dmax)
+                else:
+                    bfs, root, pred, rmatch, ins, aug_l = _expand_level(
+                        ecol, cadj, bfs, root, pred, rmatch, level, wr=wr,
+                        wr_exact=cfg.wr_exact, use_pallas=cfg.use_pallas,
+                        block_edges=block_edges, axis=axis,
+                        pallas_fused=cfg.pallas_fused,
+                        interpret=cfg.pallas_interpret, cxadj=cxadj,
+                        adaptive=cfg.adaptive_frontier,
+                        compact_cap=compact_cap,
+                        compact_dmax=compact_dmax)
                 aug_lvl = jnp.where(aug_l & (aug_lvl == IINF), level, aug_lvl)
                 return (bfs, root, pred, rmatch, level + 1, ins, aug | aug_l,
-                        aug_lvl)
+                        aug_lvl, dirp)
 
-            bfs, root, pred, rmatch, _, _, aug, _ = jax.lax.while_loop(
+            bfs, root, pred, rmatch, _, _, aug, _, _ = jax.lax.while_loop(
                 cond, body, (bfs, root, pred, rmatch, L0, jnp.bool_(True),
-                             jnp.bool_(False), IINF))
+                             jnp.bool_(False), IINF, jnp.bool_(False)))
             return bfs, root, pred, rmatch, aug
 
         def start_mask_fn(bfs, root, rmatch):

@@ -111,16 +111,22 @@ class Bucketizer:
     for graphs that fit no bucket: ``"reject"`` raises
     :class:`OversizeGraphError`; ``"shard"`` admits them with
     ``route="sharded"`` for the service to hand to ``ShardedMatcher``.
+    ``build_csc`` attaches the CSC mirror (:meth:`DeviceCSR.with_csc`) to
+    every admitted graph — required by direction-optimizing configs
+    (``MatcherConfig(dirop=True)``); the service also requests it per
+    admission when the request's config needs it, so this default only
+    matters for callers using the bucketizer directly.
     """
 
     def __init__(self, buckets: Optional[Sequence[SizeBucket]] = None,
-                 oversize: str = "reject"):
+                 oversize: str = "reject", build_csc: bool = False):
         assert oversize in ("reject", "shard"), oversize
         bs = tuple(sorted(buckets if buckets is not None else ladder(),
                           key=lambda b: b.cost))
         assert bs, "need at least one declared bucket"
         self.buckets = bs
         self.oversize = oversize
+        self.build_csc = build_csc
 
     def bucket_for(self, nc: int, nr: int, nnz: int) -> Optional[SizeBucket]:
         """Smallest (by padded footprint) declared bucket that fits."""
@@ -129,18 +135,26 @@ class Bucketizer:
                 return b
         return None
 
-    def admit(self, graph: Union[BipartiteCSR, DeviceCSR]) -> Admission:
+    def admit(self, graph: Union[BipartiteCSR, DeviceCSR],
+              csc: Optional[bool] = None) -> Admission:
         """Place ``graph`` in a bucket (pad + upload) or route/reject it.
 
         Accepts the host container or an already-uploaded ``DeviceCSR``
         (whose true ``nnz`` costs one scalar sync at admission — the padded
         edges must sit at the array tail, as every constructor here lays
-        them out).
+        them out).  ``csc`` overrides the bucketizer's ``build_csc`` default
+        per admission (the service passes ``config.dirop``); the mirror is
+        built on the bucket-shaped graph so it pads/stacks/shards with it.
         """
+        csc = self.build_csc if csc is None else csc
         if isinstance(graph, BipartiteCSR):
             nc, nr, nnz = graph.nc, graph.nr, graph.nnz
         elif isinstance(graph, DeviceCSR):
             assert not graph.batch_shape, "admit() takes a single graph"
+            # a pre-attached mirror would not survive the bucket reshaping
+            # below (the trim path slices only the CSR arrays); rebuild it
+            # on the bucket-shaped graph instead
+            graph = graph.drop_csc()
             nc, nr, nnz = graph.nc, graph.nr, int(graph.nnz)
         else:
             raise TypeError(
@@ -152,6 +166,8 @@ class Bucketizer:
                 raise OversizeGraphError(nc, nr, nnz, self.buckets[-1])
             dev = (graph if isinstance(graph, DeviceCSR)
                    else DeviceCSR.from_host(graph)).bucketed()
+            if csc:
+                dev = dev.with_csc()
             return Admission(graph=dev, bucket=None, route="sharded",
                              nc=nc, nr=nr, nnz=nnz)
         if isinstance(graph, BipartiteCSR):
@@ -165,6 +181,8 @@ class Bucketizer:
                                           ecol=dev.ecol[: b.nnz_pad])
             else:
                 dev = dev.pad_to(b.nnz_pad)
+        if csc:
+            dev = dev.with_csc()
         return Admission(graph=dev, bucket=b, route="bucket",
                          nc=nc, nr=nr, nnz=nnz)
 

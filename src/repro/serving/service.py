@@ -111,6 +111,7 @@ class MatchingService:
                                      adaptive=adaptive)
         self._matchers: Dict[Tuple[MatcherConfig, str], Matcher] = {}
         self._sharded: Dict[Tuple[MatcherConfig, str], ShardedMatcher] = {}
+        self.matcher()     # validate the default config/warm start eagerly
         self._cond = threading.Condition()
         self._ready: List[Flush] = []
         self._sharded_q: List[_Request] = []
@@ -129,6 +130,13 @@ class MatchingService:
                 warm_start: Optional[str] = None) -> Matcher:
         cfg = config if config is not None else self.config
         ws = warm_start if warm_start is not None else self.warm_start
+        if cfg.adaptive_frontier:
+            # run_many (the only dispatch path here) refuses this config;
+            # surface that in the caller's thread, not on the flush thread
+            # after the batching delay (dirop is the batch-safe variant)
+            raise ValueError(
+                "adaptive_frontier cannot be served (Matcher.run_many "
+                "refuses it under vmap); use MatcherConfig(dirop=True)")
         key = (cfg, ws)
         m = self._matchers.get(key)
         if m is None:
@@ -154,7 +162,9 @@ class MatchingService:
         ws = warm_start if warm_start is not None else self.warm_start
         self.matcher(cfg, ws)      # fail fast here, not on the flush thread
         try:
-            adm = self.bucketizer.admit(graph)
+            # dirop configs solve through the CSC mirror: admission attaches
+            # it so the dispatched pytree matches what warmup compiled
+            adm = self.bucketizer.admit(graph, csc=cfg.dirop or None)
         except OversizeGraphError:
             self.metrics.record_reject()
             raise

@@ -2,7 +2,9 @@
 x batch) grid before traffic arrives.
 
 The scheduler's batched dispatch hits the compile cache with the key
-``((batch, nc, nr, nnz_pad), config, (warm start, version), "run_many")``.
+``((batch, nc, nr, nnz_pad[, "csc"]), config, (warm start, version),
+"run_many")`` — the mirror marker appears for direction-optimizing configs,
+whose admissions carry the CSC mirror.
 Warming exactly that grid — every declared :class:`SizeBucket`, every served
 config/warm-start pair, every :func:`batch_ladder` rung — means the first
 real request on a warmed bucket *never* pays a trace or compile: its
@@ -31,17 +33,21 @@ from .bucketizer import SizeBucket
 from .scheduler import batch_ladder
 
 
-def synthetic_bucket_graph(bucket: SizeBucket) -> DeviceCSR:
+def synthetic_bucket_graph(bucket: SizeBucket, csc: bool = False
+                           ) -> DeviceCSR:
     """An empty (all-sentinel-edges) graph of exactly the bucket's shape.
 
     Solves in O(1) phases yet forces the same compiled program as any real
-    member of the bucket.
+    member of the bucket.  ``csc`` attaches the CSC mirror — compiled
+    programs key on its presence (it adds pytree leaves), so warming a
+    direction-optimizing config needs the mirrored shape.
     """
-    return DeviceCSR(
+    g = DeviceCSR(
         cxadj=jnp.zeros(bucket.nc + 1, jnp.int32),
         cadj=jnp.full(bucket.nnz_pad, bucket.nr, jnp.int32),
         ecol=jnp.full(bucket.nnz_pad, bucket.nc, jnp.int32),
         nnz=jnp.int32(0), nc=bucket.nc, nr=bucket.nr)
+    return g.with_csc() if csc else g
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,7 +100,10 @@ def warm_up(service, grid: Optional[WarmupGrid] = None) -> WarmupReport:
     info0 = compile_cache_thread_info()
     outs, cells = [], 0
     for bucket, cfg, ws, bs in grid.cells():
-        g = synthetic_bucket_graph(bucket)
+        # the mirror marker must match what admission will attach for this
+        # config, or the warmed program would differ from the served one
+        csc = cfg.dirop or service.bucketizer.build_csc
+        g = synthetic_bucket_graph(bucket, csc=csc)
         batch = DeviceCSR.stack([g] * bs)
         outs.append(service.matcher(cfg, ws).run_many(batch).cmatch)
         cells += 1

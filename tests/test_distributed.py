@@ -95,6 +95,40 @@ for schedule in ("ct", "mt"):
 print("DIST_OK")
 """
 
+# Direction-optimizing engine on the sharded path: each shard pulls over
+# its own CSC slice (jnp stream or the Pallas pull kernel), the one pmin
+# still merges, and the result must be BIT-identical to the single-device
+# jnp path across algos.  Also: the mirror must be attached before shard().
+DIROP = PRELUDE + """
+import dataclasses
+g = cases["rand"]
+opt = maximum_cardinality(g)
+graph = DeviceCSR.from_host(g)
+sharded_g = graph.with_csc().shard(mesh, "data")
+for algo in ("apfb", "apsb"):
+    for use_pallas in (False, True):
+        cfg = MatcherConfig(algo=algo, kernel="gpubfs_wr", dirop=True,
+                            use_pallas=use_pallas)
+        single = Matcher(dataclasses.replace(cfg, dirop=False,
+                                             use_pallas=False),
+                         warm_start="cheap").run(graph)
+        st = ShardedMatcher(mesh, config=cfg, warm_start="cheap").run(sharded_g)
+        cm, rm = st.to_host()
+        assert validate_matching(g, cm, rm) == opt, (algo, use_pallas)
+        np.testing.assert_array_equal(np.asarray(st.cmatch),
+                                      np.asarray(single.cmatch))
+        np.testing.assert_array_equal(np.asarray(st.rmatch),
+                                      np.asarray(single.rmatch))
+try:
+    ShardedMatcher(mesh, config=MatcherConfig(dirop=True)).run(
+        DeviceCSR.from_host(g).shard(mesh, "data"))
+except ValueError as e:
+    assert "with_csc" in str(e), e
+else:
+    raise AssertionError("missing mirror must be a typed error")
+print("DIST_OK")
+"""
+
 # The numpy-compat wrapper (old core.distributed surface) and warm-state
 # resume via cmatch0/rmatch0.
 COMPAT = PRELUDE + """
@@ -113,7 +147,7 @@ print("DIST_OK")
 """
 
 SCENARIOS = {"equality": EQUALITY, "cache": CACHE, "pallas": PALLAS,
-             "compat": COMPAT}
+             "dirop": DIROP, "compat": COMPAT}
 
 
 @pytest.mark.parametrize("scenario", sorted(SCENARIOS))

@@ -1,13 +1,20 @@
 """Every frontier-sweep execution path against the one deterministic
 min-merge contract (ISSUE 4: the fused kernel must be bit-identical to the
-scatter_min-merged proposals on all variants), plus the edge-tile geometry
+scatter_min-merged proposals on all variants; ISSUE 5: so must the pull
+sweeps of the direction-optimizing engine), plus the edge-tile geometry
 fixes and the ALTERNATE micro-optimizations.
 
 Split by concern:
-* kernel-level: fused winners == scatter_min(legacy proposals) == fused ref;
-* solver-level: jnp / Pallas-interpret / Pallas-compiled / adaptive sweeps
-  give bit-identical matchings across the paper's variant matrix and both
-  WR encodings (compiled skipped on hosts without a non-CPU backend);
+* kernel-level: fused winners == scatter_min(legacy proposals) == fused ref
+  == pull winners over the CSC-permuted edges;
+* CSC mirror: `DeviceCSR.with_csc` agrees with the host transpose and rides
+  every shape operation (pad_to / pad_vertices / stack);
+* solver-level: jnp / Pallas-interpret / Pallas-compiled / adaptive / dirop
+  sweeps give bit-identical matchings across the paper's variant matrix and
+  both WR encodings (compiled skipped on hosts without a non-CPU backend);
+* dirop: forced-pull and forced-push runs agree; the compact pull falls
+  back cleanly on skewed degrees; config plumbing (mirror errors, the
+  adaptive/dirop exclusion, hysteresis bounds) fails loudly;
 * geometry: `default_block_edges` no longer degenerates on prime edge
   counts, bad tiles raise a typed ValueError at trace time;
 * ALTERNATE: the gather-hoisted, scatter-skipping loop is a step-count-
@@ -27,7 +34,10 @@ from repro.graphs import random_bipartite, scaled_free
 from repro.kernels.frontier_expand import (frontier_expand,
                                            frontier_expand_fused,
                                            frontier_expand_fused_ref,
+                                           frontier_expand_pull,
+                                           frontier_expand_pull_ref,
                                            resolve_interpret)
+from repro.matching import DeviceCSR, Matcher
 from repro.matching.solve import (IINF, _alternate, default_block_edges,
                                   level0_state, scatter_min)
 
@@ -67,6 +77,74 @@ def test_fused_kernel_bit_identical_to_scatter_min(nc, nr, deg, pad, blk):
         np.testing.assert_array_equal(np.asarray(fused), np.asarray(ref))
 
 
+@pytest.mark.parametrize("nc,nr,deg,pad,blk", [
+    (256, 256, 3.0, 1024, 256),
+    (500, 700, 4.0, 3000, 512),      # pad not a multiple of the tile
+    (300, 200, 5.0, 2048, 999),      # tile not a divisor of anything nice
+])
+def test_pull_kernel_bit_identical_to_push_winners(nc, nr, deg, pad, blk):
+    """The pull kernel streams the CSC-permuted edges; min is the merge, so
+    its winners must equal the fused/push winners bit for bit."""
+    g = random_bipartite(nc, nr, deg, seed=nc + 3 * nr, pad_to=pad)
+    bfs, root, rmj = _bfs_state(g)
+    ecol, cadj = jnp.asarray(g.ecol), jnp.asarray(g.cadj)
+    d = DeviceCSR.from_host(g).with_csc()
+    for rt in (root, None):
+        push = frontier_expand_fused(ecol, cadj, bfs, rt, rmj, 2,
+                                     block_edges=blk)
+        pull = frontier_expand_pull(d.radj, d.erow, bfs, rt, rmj, 2,
+                                    block_edges=blk)
+        ref = frontier_expand_pull_ref(d.radj, d.erow, bfs, rt, rmj,
+                                       jnp.int32(2))
+        np.testing.assert_array_equal(np.asarray(pull), np.asarray(push))
+        np.testing.assert_array_equal(np.asarray(pull), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# the CSC mirror
+# ---------------------------------------------------------------------------
+def test_csc_mirror_matches_host_transpose_and_threads_through_ops():
+    g = random_bipartite(60, 50, 3.0, seed=5)
+    t = g.transpose()
+    d = DeviceCSR.from_host(g).with_csc()
+    np.testing.assert_array_equal(np.asarray(d.rxadj), t.cxadj)
+    np.testing.assert_array_equal(np.asarray(d.radj)[: g.nnz],
+                                  t.cadj[: t.nnz])
+    np.testing.assert_array_equal(np.asarray(d.erow)[: g.nnz],
+                                  t.ecol[: t.nnz])
+    # eperm is a true permutation mapping row-sorted slots to CSR slots
+    perm = np.asarray(d.eperm)
+    assert sorted(perm.tolist()) == list(range(d.nnz_pad))
+    np.testing.assert_array_equal(np.asarray(d.ecol)[perm],
+                                  np.asarray(d.radj))
+    np.testing.assert_array_equal(np.asarray(d.cadj)[perm],
+                                  np.asarray(d.erow))
+    assert d.has_csc and d.bucket_key == (60, 50, d.nnz_pad, "csc")
+    assert not d.drop_csc().has_csc
+
+    # pad_to: mirror sentinels extend, eperm stays a permutation
+    d2 = d.pad_to(2 * d.nnz_pad)
+    perm2 = np.asarray(d2.eperm)
+    assert sorted(perm2.tolist()) == list(range(d2.nnz_pad))
+    np.testing.assert_array_equal(np.asarray(d2.ecol)[perm2],
+                                  np.asarray(d2.radj))
+
+    # pad_vertices: new rows are edgeless, sentinels re-encoded
+    d3 = d.pad_vertices(64, 64)
+    assert d3.rxadj.shape == (65,) and int(d3.rxadj[-1]) == g.nnz
+    assert (np.asarray(d3.erow)[g.nnz:] == 64).all()
+    np.testing.assert_array_equal(np.asarray(d3.radj)[: g.nnz],
+                                  t.cadj[: t.nnz])
+
+    # stack: mirror leaves gain the batch axis; mixing is refused
+    b = DeviceCSR.stack([d, d])
+    assert b.bucket_key == (2, 60, 50, d.nnz_pad, "csc")
+    np.testing.assert_array_equal(np.asarray(b.unstack()[1].radj),
+                                  np.asarray(d.radj))
+    with pytest.raises(AssertionError, match="with_csc"):
+        DeviceCSR.stack([d, d.drop_csc()])
+
+
 # ---------------------------------------------------------------------------
 # geometry
 # ---------------------------------------------------------------------------
@@ -89,7 +167,8 @@ def test_bad_block_edges_raises_typed_error():
     g = random_bipartite(64, 64, 2.0, seed=0, pad_to=256)
     bfs, root, rmj = _bfs_state(g)
     ecol, cadj = jnp.asarray(g.ecol), jnp.asarray(g.cadj)
-    for entry in (frontier_expand, frontier_expand_fused):
+    for entry in (frontier_expand, frontier_expand_fused,
+                  frontier_expand_pull):
         with pytest.raises(ValueError, match=r"block_edges=0 for nnz=256"):
             entry(ecol, cadj, bfs, root, rmj, 2, block_edges=0)
         with pytest.raises(ValueError, match="block_edges"):
@@ -114,6 +193,8 @@ PATHS = {
     "pallas_fused": dict(use_pallas=True),
     "pallas_legacy": dict(use_pallas=True, pallas_fused=False),
     "adaptive": dict(adaptive_frontier=True, compact_cap=64, compact_dmax=8),
+    "dirop": dict(dirop=True, pull_cap=64, pull_dmax=8),
+    "dirop_pallas": dict(dirop=True, use_pallas=True),
 }
 
 
@@ -147,6 +228,12 @@ def test_sweep_paths_compiled_parity(cfg):
         cm, rm, _ = maximum_matching(g, pcfg, cm0, rm0)
         np.testing.assert_array_equal(ref_cm, cm)
         np.testing.assert_array_equal(ref_rm, rm)
+    # the compiled pull kernel (direction-optimizing path)
+    dcfg = dataclasses.replace(cfg, use_pallas=True, dirop=True,
+                               pallas_interpret=False)
+    cm, rm, _ = maximum_matching(g, dcfg, cm0, rm0)
+    np.testing.assert_array_equal(ref_cm, cm)
+    np.testing.assert_array_equal(ref_rm, rm)
 
 
 def test_adaptive_runtime_fallback_on_skewed_degrees():
@@ -161,6 +248,57 @@ def test_adaptive_runtime_fallback_on_skewed_degrees():
     np.testing.assert_array_equal(ref_cm, cm)
     np.testing.assert_array_equal(ref_rm, rm)
     assert validate_matching(g, cm, rm) == maximum_cardinality(g)
+
+
+# ---------------------------------------------------------------------------
+# the direction-optimizing engine
+# ---------------------------------------------------------------------------
+def test_dirop_forced_directions_agree():
+    """Pin the heuristic to each extreme: always-pull-if-possible vs
+    never-pull must still produce the reference matching bit for bit (the
+    direction decision is a pure performance choice)."""
+    g = random_bipartite(220, 200, 3.5, seed=29)
+    cfg = MatcherConfig(algo="apfb", kernel="gpubfs_wr")
+    ref_cm, ref_rm, _ = maximum_matching(g, cfg)
+    for alpha, beta in ((1e6, 1e6), (1e-6, 1e-6)):
+        dcfg = dataclasses.replace(cfg, dirop=True, dirop_alpha=alpha,
+                                   dirop_beta=beta)
+        cm, rm, _ = maximum_matching(g, dcfg)
+        np.testing.assert_array_equal(ref_cm, cm, err_msg=str(alpha))
+        np.testing.assert_array_equal(ref_rm, rm, err_msg=str(alpha))
+
+
+def test_dirop_compact_pull_fallback_on_skewed_degrees():
+    """Power-law rows exceed pull_dmax -> the compact pull is ineligible
+    and the engine stays on the push sweep; results stay bit-identical."""
+    g = scaled_free(300, 300, 5.0, seed=7).permuted(2)
+    cfg = MatcherConfig(algo="apfb", kernel="gpubfs_wr")
+    ref_cm, ref_rm, _ = maximum_matching(g, cfg)
+    dcfg = dataclasses.replace(cfg, dirop=True, pull_cap=64, pull_dmax=2)
+    cm, rm, _ = maximum_matching(g, dcfg)
+    np.testing.assert_array_equal(ref_cm, cm)
+    np.testing.assert_array_equal(ref_rm, rm)
+    assert validate_matching(g, cm, rm) == maximum_cardinality(g)
+
+
+def test_dirop_requires_the_csc_mirror():
+    g = random_bipartite(64, 64, 2.0, seed=1)
+    m = Matcher(MatcherConfig(dirop=True))
+    with pytest.raises(ValueError, match="with_csc"):
+        m.run(DeviceCSR.from_host(g))
+    st = m.run(DeviceCSR.from_host(g).with_csc())
+    assert int(st.cardinality) == maximum_cardinality(g)
+
+
+def test_dirop_config_validation():
+    with pytest.raises(ValueError, match="generalizes"):
+        MatcherConfig(dirop=True, adaptive_frontier=True)
+    with pytest.raises(AssertionError, match="hysteresis"):
+        MatcherConfig(dirop_alpha=8.0, dirop_beta=4.0)  # beta < alpha
+    # the dirop knobs are dataclass fields -> part of every cache key
+    a = MatcherConfig(dirop=True)
+    b = MatcherConfig(dirop=True, dirop_alpha=2.0, dirop_beta=2.0)
+    assert a != b and hash(a) != hash(b)
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,6 @@
 """repro.serving: bucketizer admission, scheduler policy, AOT warmup, and
 service-level cardinality parity with the direct Matcher."""
+import dataclasses
 import threading
 
 import numpy as np
@@ -193,6 +194,61 @@ def test_warmup_makes_first_dispatch_compile_free():
                          warm_start="cheap", max_batch=4) as svc2:
         report2 = svc2.warm_up()
     assert report2.compiled == 0 and report2.already == report2.cells
+
+
+@pytest.mark.parametrize("kernel_cfg", [
+    dataclasses.replace(CFG, use_pallas=True),
+    dataclasses.replace(CFG, dirop=True),
+    dataclasses.replace(CFG, dirop=True, use_pallas=True),
+], ids=["pallas_fused", "dirop", "dirop_pallas"])
+def test_warmup_zero_miss_across_kernel_paths(kernel_cfg):
+    """Serving x kernel paths: a service running the Pallas-fused or
+    direction-optimizing configs still gets a compile-free first dispatch
+    after warmup — the warmup grid must cover the new config axes,
+    including the CSC-mirrored graph shape dirop admissions carry."""
+    compile_cache_clear()
+    g = random_bipartite(200, 180, 3.0, seed=1)
+    with MatchingService(bucketizer=Bucketizer((BUCKET,)), config=kernel_cfg,
+                         warm_start="cheap", max_batch=4,
+                         max_delay_ms=5.0) as svc:
+        report = svc.warm_up()
+        assert report.compiled == report.cells      # cold cache: all built
+        misses0 = compile_cache_info()["misses"]
+        res = svc.submit(g).result(timeout=300)
+        svc.drain()
+        snap = svc.metrics.snapshot()
+    # the zero-miss checks first: direct_cardinality below compiles its own
+    # (non-serving) program and must not be counted against the dispatch
+    assert compile_cache_info()["misses"] == misses0
+    assert snap["compile_misses"] == 0 and snap["compile_hits"] >= 1
+    assert res.cardinality == direct_cardinality(g)
+
+
+def test_service_rejects_adaptive_frontier_synchronously():
+    """run_many can never serve adaptive_frontier; the service must say so
+    in the caller's thread, not via an async failure on the flush thread."""
+    g = random_bipartite(128, 128, 3.0, seed=21)
+    acfg = dataclasses.replace(CFG, adaptive_frontier=True)
+    with pytest.raises(ValueError, match="dirop"):
+        MatchingService(bucketizer=Bucketizer((BUCKET,)), config=acfg)
+    with MatchingService(bucketizer=Bucketizer((BUCKET,)), config=CFG,
+                         warm_start="cheap", max_batch=4,
+                         max_delay_ms=5.0) as svc:
+        with pytest.raises(ValueError, match="dirop"):
+            svc.submit(g, config=acfg)
+        res = svc.submit(g).result(timeout=300)      # service still serves
+        assert res.cardinality == direct_cardinality(g)
+
+
+def test_dirop_admission_attaches_csc_mirror():
+    """A dirop request's admitted graph must carry the mirror (and only
+    then), so the dispatched pytree matches the warmed one."""
+    bz = Bucketizer((BUCKET,))
+    g = random_bipartite(200, 180, 3.0, seed=1)
+    assert not bz.admit(g).graph.has_csc
+    assert bz.admit(g, csc=True).graph.has_csc
+    mirrored = Bucketizer((BUCKET,), build_csc=True).admit(g).graph
+    assert mirrored.has_csc and mirrored.bucket_key == BUCKET.key + ("csc",)
 
 
 def test_service_routes_oversize_to_sharded_matcher():
