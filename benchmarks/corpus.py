@@ -1,0 +1,140 @@
+"""§Corpus: per-family dirop win/loss + the deterministic heuristic gate.
+
+The paper's evaluation spans instance *families* (road, Kronecker,
+web/social, LP, plus RCP-permuted copies) precisely because algorithm
+win/loss flips per family; a single-family gate cannot see an
+``alpha``/``beta`` regression that only hurts, say, the road-like
+instances.  This bench records, per corpus family × {orig, rcp}:
+
+* ``corpus.family`` — measured wall-clock ``rel`` of the
+  direction-optimizing matcher vs the push-only matcher (informational:
+  timing rows are too host-noisy to gate);
+* ``corpus.heuristic`` — the **gated** rows: the deterministic modelled
+  ``rel`` of the dirop decisions at the shipped defaults, from
+  :mod:`repro.corpus.heuristic`'s exact replay + tile work model.  A
+  broken ``dirop_alpha``/``dirop_beta`` moves these rows far past any gate
+  tolerance, and they are bit-reproducible across hosts;
+* ``corpus.heuristic_detail`` — pull/level counts behind each gated row;
+* ``corpus.alpha_sweep`` (+``_summary``) — the committed (alpha, beta)
+  sweep the :class:`~repro.matching.MatcherConfig` dirop defaults cite.
+
+Through the harness + gate::
+
+    python -m benchmarks.run --only corpus --scale tiny \
+        --json bench_new.json --baseline BENCH_PR7.json
+    python -m benchmarks.run --only perf_smoke,corpus --scale tiny \
+        --update-baseline BENCH_PR7.json --runs 3
+"""
+from __future__ import annotations
+
+import sys
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from repro.core import MatcherConfig
+from repro.core.csr import BipartiteCSR
+from repro.corpus.heuristic import (LANE, PULL_TILE_OVERHEAD, HeuristicTrace,
+                                    modelled_rel, sweep_grid, trace_instance)
+from repro.corpus.verify import corpus_instances, shared_bucket
+from repro.matching import DeviceCSR, Matcher
+
+from .common import geomean, time_call
+
+PUSH = MatcherConfig(algo="apfb", kernel="gpubfs_wr")
+DIROP = MatcherConfig(algo="apfb", kernel="gpubfs_wr", dirop=True)
+
+
+def _split(name: str) -> Tuple[str, str]:
+    return (name[:-4], "rcp") if name.endswith("_rcp") else (name, "orig")
+
+
+def family_rows(insts: Dict[str, BipartiteCSR], repeat: int = 3) -> List[str]:
+    """Measured dirop-vs-push timing per family.
+
+    Every instance is padded into one shared bucket so the whole set runs on
+    two compiled programs (push, dirop) — and the two matchers sweep the
+    same padded edge count, so ``rel`` isolates the direction decisions.
+    """
+    backend = jax.default_backend()
+    pad = shared_bucket(insts.values())
+    rows = ["corpus.family,backend,family,set,push_ms,dirop_ms,rel"]
+    push_m = Matcher(PUSH, warm_start="cheap")
+    dirop_m = Matcher(DIROP, warm_start="cheap")
+    for name, g in insts.items():
+        base = (DeviceCSR.from_host(g)
+                .pad_vertices(pad[0], pad[1]).pad_to(pad[2]))
+        csc = base.with_csc()
+
+        def timed(m, gr):
+            jax.block_until_ready(m.run(gr).cmatch)        # compile, untimed
+            return time_call(
+                lambda: jax.block_until_ready(m.run(gr).cmatch), repeat)
+
+        tp, td = timed(push_m, base), timed(dirop_m, csc)
+        fam, s = _split(name)
+        rows.append(f"corpus.family,{backend},{fam},{s},{tp*1e3:.2f},"
+                    f"{td*1e3:.2f},{td/tp:.3f}")
+    return rows
+
+
+def heuristic_traces(insts: Dict[str, BipartiteCSR]
+                     ) -> Dict[str, HeuristicTrace]:
+    return {n: trace_instance(g) for n, g in insts.items()}
+
+
+def heuristic_rows(insts: Dict[str, BipartiteCSR],
+                   traces: Optional[Dict[str, HeuristicTrace]] = None,
+                   alpha: float = DIROP.dirop_alpha,
+                   beta: float = DIROP.dirop_beta,
+                   ) -> Tuple[List[str], Dict[str, HeuristicTrace]]:
+    """The gated deterministic rows (plus detail), at the given thresholds.
+
+    Exposed with explicit ``alpha``/``beta`` so tests can demonstrate the
+    gate catching a deliberately broken heuristic without touching config.
+    """
+    if traces is None:
+        traces = heuristic_traces(insts)
+    rows = [f"# corpus.heuristic model: LANE={LANE} "
+            f"PULL_TILE_OVERHEAD={PULL_TILE_OVERHEAD} "
+            f"alpha={alpha:g} beta={beta:g}",
+            "corpus.heuristic,family,set,rel"]
+    detail = ["corpus.heuristic_detail,family,set,alpha,beta,pulls,levels,rel"]
+    for name, tr in traces.items():
+        rel, pulls = modelled_rel(tr, alpha, beta)
+        fam, s = _split(name)
+        rows.append(f"corpus.heuristic,{fam},{s},{rel:.3f}")
+        detail.append(f"corpus.heuristic_detail,{fam},{s},{alpha:g},{beta:g},"
+                      f"{pulls},{tr.levels},{rel:.3f}")
+    return rows + detail, traces
+
+
+def sweep_rows(traces: Dict[str, HeuristicTrace]) -> List[str]:
+    """The committed (alpha, beta) sweep + its geomean summary — what the
+    shipped dirop defaults cite."""
+    rows = ["corpus.alpha_sweep,family,set,alpha,beta,rel"]
+    geo: Dict[Tuple[float, float], List[float]] = {}
+    for name, tr in traces.items():
+        fam, s = _split(name)
+        for a, b in sweep_grid():
+            rel, _ = modelled_rel(tr, a, b)
+            rows.append(f"corpus.alpha_sweep,{fam},{s},{a:g},{b:g},{rel:.3f}")
+            geo.setdefault((a, b), []).append(rel)
+    rows.append("corpus.alpha_sweep_summary,alpha,beta,rel")
+    for (a, b), rels in geo.items():
+        rows.append(f"corpus.alpha_sweep_summary,{a:g},{b:g},"
+                    f"{geomean(rels):.3f}")
+    rows.append(f"# sweep basis for the MatcherConfig dirop defaults "
+                f"alpha={DIROP.dirop_alpha:g}/beta={DIROP.dirop_beta:g}")
+    return rows
+
+
+def run(scale: str = "tiny") -> List[str]:
+    insts = corpus_instances(scale=scale, rcp=True)
+    rows = family_rows(insts)
+    hrows, traces = heuristic_rows(insts)
+    return rows + hrows + sweep_rows(traces)
+
+
+if __name__ == "__main__":
+    print("\n".join(run(sys.argv[1] if len(sys.argv) > 1 else "tiny")))

@@ -1,5 +1,5 @@
 """§Perf-smoke: the level-sweep microbench + solve bench behind the repo's
-committed perf baseline (``BENCH_PR5.json``).
+committed perf baseline (``BENCH_PR7.json``).
 
 Every row carries a machine-portable ``rel`` ratio (path time over the jnp
 path's time on the same input) so the CI regression gate compares relative
@@ -23,9 +23,9 @@ Run directly, or through the harness + regression gate (refresh the
 committed baseline with ``--update-baseline``, never by hand):
 
     python -m benchmarks.run --only perf_smoke --scale tiny \
-        --json bench_new.json --baseline BENCH_PR5.json
-    python -m benchmarks.run --only perf_smoke --scale tiny \
-        --update-baseline BENCH_PR5.json --runs 3
+        --json bench_new.json --baseline BENCH_PR7.json
+    python -m benchmarks.run --only perf_smoke,corpus --scale tiny \
+        --update-baseline BENCH_PR7.json --runs 3
 """
 from __future__ import annotations
 

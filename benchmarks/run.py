@@ -5,7 +5,8 @@
 
 ``--json PATH`` additionally records every bench's rows (plus backend/scale
 metadata) as a JSON artifact — the schema behind the committed perf baseline
-``BENCH_PR5.json``.  With ``--baseline BASE`` (and BASE present on disk) the
+``BENCH_PR7.json`` (``BENCH_PR5.json`` is the prior envelope, kept for
+history).  With ``--baseline BASE`` (and BASE present on disk) the
 run becomes a perf gate: for the benches in :data:`REGRESSION_BENCHES` each
 row's machine-portable ``rel`` column is compared against the baseline row
 with the same identity, and the harness exits non-zero on a
@@ -26,9 +27,10 @@ import os
 import sys
 import time
 
-from . import (autotune, batch_matching, fig2_bfs_iters, fig35_speedups,
-               perf_matcher, perf_smoke, roofline, serving, sharded_matching,
-               table1_variants, table2_hardest, table_init, table_router)
+from . import (autotune, batch_matching, corpus, fig2_bfs_iters,
+               fig35_speedups, perf_matcher, perf_smoke, roofline, serving,
+               sharded_matching, table1_variants, table2_hardest, table_init,
+               table_router)
 
 BENCHES = {
     "table1": table1_variants.run,     # paper Table 1
@@ -44,14 +46,20 @@ BENCHES = {
     "batch": batch_matching.run,       # match_many serving throughput
     "sharded": sharded_matching.run,   # ShardedMatcher vs single-device sweep
     "serving": serving.run,            # MatchingService open-loop load sweep
+    "corpus": corpus.run,              # per-family dirop win/loss + heuristic gate
 }
 
 # row sets that feed the --baseline regression gate.  Gated rows must carry
 # a `rel` column: time relative to the same-host jnp path, portable across
 # machine speeds (absolute ms would flake on slower runners) — and only the
 # aggregated sets are gated; per-graph sub-ms detail rows are too noisy.
-REGRESSION_BENCHES = ("perf_smoke",)
-GATED_SETS = ("perf_smoke.sweep_summary", "perf_smoke.solve")
+# corpus.heuristic rows are deterministic modelled rels (no timing at all),
+# so an alpha/beta heuristic regression fails the gate exactly like a perf
+# regression — run that bench with a much tighter --tolerance than the
+# timing-based perf_smoke sets (CI uses separate --only invocations).
+REGRESSION_BENCHES = ("perf_smoke", "corpus")
+GATED_SETS = ("perf_smoke.sweep_summary", "perf_smoke.solve",
+              "corpus.heuristic")
 
 SCHEMA = "repro-bench/1"
 

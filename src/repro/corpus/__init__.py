@@ -1,0 +1,26 @@
+"""Corpus-driven differential verification (ISSUE 7).
+
+Two pieces, both enumerating the same registered surfaces instead of
+hand-rolled lists:
+
+* :mod:`repro.corpus.verify` — the differential fuzz harness: every
+  registered solve path (:data:`repro.matching.SOLVE_PATHS`) × warm-start
+  config over every corpus family (original + RCP), cardinality checked
+  against the host Hopcroft-Karp oracle, with a minimized failing-edge-list
+  artifact dumped on mismatch.  ``python -m repro.corpus.verify`` is the CLI.
+* :mod:`repro.corpus.heuristic` — a deterministic replay of the
+  direction-optimizing push/pull decisions with a documented work model, so
+  the dirop ``alpha``/``beta`` defaults are gateable per family without
+  timing flake (``benchmarks/corpus.py`` feeds it into the perf gate).
+"""
+from .heuristic import (PULL_STREAM_FRACTION, modelled_rel, sweep_grid,
+                        trace_instance)
+from .verify import (CellResult, FuzzReport, corpus_instances,
+                     minimize_failing_edges, oracle_cardinality,
+                     verify_corpus)
+
+__all__ = [
+    "CellResult", "FuzzReport", "corpus_instances", "minimize_failing_edges",
+    "oracle_cardinality", "verify_corpus",
+    "PULL_STREAM_FRACTION", "modelled_rel", "sweep_grid", "trace_instance",
+]

@@ -12,8 +12,16 @@ Offline we reproduce the same *structure classes*:
 * ``kron_graph``       — RMAT/Kronecker power-law (kron_g500-style),
 * ``grid_graph``       — 2-D mesh adjacency (road/Delaunay-style: long paths),
 * ``scaled_free``      — heavy-tail degree columns (web/social-style),
+* ``banded``           — banded LP/PDE matrices,
+* ``community_graph``  — stochastic-block bipartite (clustered social-style),
+* ``comb_chain``       — adversarial single long augmenting path (the BFS
+  worst case: one phase whose search tree is ``O(n)`` levels deep),
 
-and ``BipartiteCSR.permuted()`` provides the RCP transform.
+``BipartiteCSR.permuted()`` provides the RCP transform, and
+:func:`instance_sets` bundles one instance per family at every scale
+(``rcp=True`` adds the permuted twins) so per-family gates compare like to
+like across scales.  Real UFL/SuiteSparse matrices drop in through
+:func:`repro.graphs.mtx.load_mtx`.
 """
 from __future__ import annotations
 
@@ -84,39 +92,122 @@ def scaled_free(nc: int, nr: int, avg_deg: float, alpha: float = 1.8,
     return BipartiteCSR.from_edges(cols, rows, nc, nr, pad_to=pad_to)
 
 
-def instance_sets(scale: str = "small") -> Dict[str, BipartiteCSR]:
-    """Named instance suite (original set; use .permuted() for the RCP set).
+def community_graph(nc: int, nr: int, blocks: int = 8, avg_deg: float = 4.0,
+                    p_in: float = 0.9, seed: int = 0,
+                    pad_to=None) -> BipartiteCSR:
+    """Bipartite stochastic-block graph (community-structured social-style).
 
-    ``scale``: "tiny" (tests), "small" (CI benchmarks), "large" (full bench).
+    Columns and rows are split into ``blocks`` aligned groups; each edge
+    stays inside its column's row-group with probability ``p_in`` and lands
+    uniformly at random otherwise.  RCP permutation destroys exactly this
+    block locality, which is what makes the paper's RCP sets harder.
     """
-    if scale == "tiny":
-        return {
-            "rand_1k": random_bipartite(1024, 1024, 4.0, seed=1),
-            "band_1k": banded(1024, band=4, density=0.5, seed=6),
-            "rand_rect": random_bipartite(768, 1280, 5.0, seed=2),
-            "kron_10": kron_graph(10, 8, seed=3),
-            "grid_24": grid_graph(24),
-            "free_1k": scaled_free(1024, 1024, 6.0, seed=4),
-        }
-    if scale == "small":
-        return {
-            "rand_16k": random_bipartite(16384, 16384, 5.0, seed=1),
-            "band_16k": banded(16384, band=6, density=0.5, seed=6),
-            "rand_rect16k": random_bipartite(12288, 20480, 6.0, seed=2),
-            "kron_14": kron_graph(14, 8, seed=3),
-            "grid_96": grid_graph(96),
-            "free_16k": scaled_free(16384, 16384, 8.0, seed=4),
-            "sparse_16k": random_bipartite(16384, 16384, 2.5, seed=5),
-        }
-    if scale == "large":
-        return {
-            "rand_262k": random_bipartite(1 << 18, 1 << 18, 5.0, seed=1),
-            "kron_17": kron_graph(17, 8, seed=3),
-            "grid_384": grid_graph(384),
-            "free_262k": scaled_free(1 << 18, 1 << 18, 8.0, seed=4),
-            "sparse_262k": random_bipartite(1 << 18, 1 << 18, 2.5, seed=5),
-        }
-    raise ValueError(scale)
+    assert 1 <= blocks <= min(nc, nr), (blocks, nc, nr)
+    rng = np.random.default_rng(seed)
+    nnz = int(nc * avg_deg)
+    cols = rng.integers(0, nc, size=nnz)
+    cblk = cols * blocks // nc
+    r_lo = cblk * nr // blocks
+    r_hi = (cblk + 1) * nr // blocks
+    row_in = r_lo + (rng.random(nnz) * (r_hi - r_lo)).astype(np.int64)
+    row_out = rng.integers(0, nr, size=nnz)
+    rows = np.where(rng.random(nnz) < p_in, row_in, row_out)
+    return BipartiteCSR.from_edges(cols, rows, nc, nr, pad_to=pad_to)
+
+
+def comb_chain(length: int, teeth: int = 0, seed: int = 0,
+               pad_to=None) -> BipartiteCSR:
+    """Adversarial long-augmenting-path "comb" (worst case for BFS matchers).
+
+    A chain of ``length+1`` columns over ``length+1`` spine rows:
+
+    * column 0 sees rows {0, 1}; column i (0<i<length) sees {i, i+1};
+    * column ``length`` sees only row 0.
+
+    The sequential cheap/greedy init (which always picks the lowest free row)
+    matches column i to row i, leaving column ``length`` unmatched — and the
+    *only* augmenting path left is c_len→r_0→c_0→r_1→…→c_{len-1}→r_len, of
+    length ``2*length+1``.  One BFS phase must therefore run ``O(length)``
+    level iterations: the deep-search stressor the paper's road instances
+    approximate.  ``teeth`` extra free rows (ids above the spine, so the
+    greedy init ignores them) inflate the pull-side degree mass the
+    direction-optimizing heuristic reads; they attach only to columns in the
+    last quarter of the spine — a free tooth row on an early column would
+    short-circuit the alternating tree and collapse the BFS depth, so this
+    keeps the shortest augmenting path at ``>= 3*length/4`` levels.
+    """
+    assert length >= 1
+    cols_l = [np.repeat(np.arange(length, dtype=np.int64), 2),
+              np.asarray([length], dtype=np.int64)]
+    spine = np.arange(length, dtype=np.int64)
+    rows_l = [np.stack([spine, spine + 1], axis=1).ravel(),
+              np.asarray([0], dtype=np.int64)]
+    nr = length + 1 + teeth
+    if teeth:
+        rng = np.random.default_rng(seed)
+        tooth_deg = 4
+        lo = max(0, (3 * length) // 4)
+        cols_l.append(rng.integers(lo, length, size=teeth * tooth_deg))
+        rows_l.append(np.repeat(np.arange(length + 1, nr, dtype=np.int64),
+                                tooth_deg))
+    return BipartiteCSR.from_edges(np.concatenate(cols_l),
+                                   np.concatenate(rows_l),
+                                   length + 1, nr, pad_to=pad_to)
+
+
+# one parameter tuple per scale; every scale instantiates the SAME families
+# (keys below) so per-family gate rows compare like to like across scales.
+# n = square-family vertex count, rect = (nc, nr), kron = log2 scale,
+# grid = side, comb = chain length (BFS depth ~ 2*comb).
+_SCALE_PARAMS = {
+    "mini":  dict(n=256, deg=4.0, rect=(192, 320), kron=7, grid=12,
+                  free_deg=5.0, sparse_deg=2.5, band=3, blocks=4, comb=64,
+                  teeth=16),
+    "tiny":  dict(n=1024, deg=4.0, rect=(768, 1280), kron=10, grid=24,
+                  free_deg=6.0, sparse_deg=2.5, band=4, blocks=8, comb=192,
+                  teeth=48),
+    "small": dict(n=16384, deg=5.0, rect=(12288, 20480), kron=14, grid=96,
+                  free_deg=8.0, sparse_deg=2.5, band=6, blocks=16, comb=2048,
+                  teeth=512),
+    "large": dict(n=1 << 18, deg=5.0, rect=(3 << 16, 5 << 16), kron=17,
+                  grid=384, free_deg=8.0, sparse_deg=2.5, band=8, blocks=32,
+                  comb=8192, teeth=2048),
+}
+
+INSTANCE_FAMILIES = ("rand", "sparse", "rand_rect", "band", "kron", "grid",
+                     "free", "community", "comb")
+
+
+def instance_sets(scale: str = "small", rcp: bool = False,
+                  rcp_seed: int = 13) -> Dict[str, BipartiteCSR]:
+    """Named instance suite: one instance per family, same families at every
+    scale (:data:`INSTANCE_FAMILIES`).
+
+    ``scale``: "mini" (fast unit tests), "tiny" (tests), "small" (CI
+    benchmarks), "large" (full bench).  ``rcp=True`` appends a
+    ``<family>_rcp`` row/column-permuted twin per family — the paper's RCP
+    sets, which destroy locality without changing the matching number.
+    """
+    if scale not in _SCALE_PARAMS:
+        raise ValueError(scale)
+    p = _SCALE_PARAMS[scale]
+    n = p["n"]
+    out = {
+        "rand": random_bipartite(n, n, p["deg"], seed=1),
+        "sparse": random_bipartite(n, n, p["sparse_deg"], seed=5),
+        "rand_rect": random_bipartite(*p["rect"], p["deg"] + 1.0, seed=2),
+        "band": banded(n, band=p["band"], density=0.5, seed=6),
+        "kron": kron_graph(p["kron"], 8, seed=3),
+        "grid": grid_graph(p["grid"]),
+        "free": scaled_free(n, n, p["free_deg"], seed=4),
+        "community": community_graph(n, n, blocks=p["blocks"],
+                                     avg_deg=p["deg"], seed=7),
+        "comb": comb_chain(p["comb"], teeth=p["teeth"], seed=8),
+    }
+    if rcp:
+        out.update({f"{k}_rcp": g.permuted(rcp_seed)
+                    for k, g in tuple(out.items())})
+    return out
 
 
 def banded(n: int, band: int = 5, density: float = 0.6, seed: int = 0,

@@ -1,0 +1,41 @@
+"""Matrix Market loader — real SuiteSparse/UFL instances drop into the corpus.
+
+The paper's evaluation set is 70 UFL sparse matrices (plus RCP-permuted
+copies).  :func:`load_mtx` turns any ``.mtx`` file into a
+:class:`~repro.core.csr.BipartiteCSR`: matrix columns become column vertices,
+matrix rows become row vertices (the paper matches the columns of A onto its
+rows), values are ignored — only the sparsity pattern matters for cardinality
+matching.  Explicit stored zeros are kept as edges, matching how the UFL
+pattern collection treats them.
+
+``fixtures/`` holds one tiny committed instance so the loader (and the
+corpus plumbing downstream of it) is exercised in tier-1 tests without
+network access; pointing :func:`load_mtx` at a downloaded SuiteSparse file
+is the production path.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core.csr import BipartiteCSR
+
+FIXTURE_DIR = os.path.join(os.path.dirname(__file__), "fixtures")
+
+
+def load_mtx(path: str, pad_to=None) -> BipartiteCSR:
+    """Load a Matrix Market (coordinate or array) file as a bipartite graph.
+
+    Symmetric storage is expanded by scipy, so a symmetric UFL matrix yields
+    the same edge set as its ``general`` form; duplicate entries collapse in
+    ``from_edges``.
+    """
+    from scipy.io import mmread
+
+    m = mmread(path).tocoo()
+    nr, nc = (int(s) for s in m.shape)
+    return BipartiteCSR.from_edges(m.col, m.row, nc, nr, pad_to=pad_to)
+
+
+def mtx_fixture(name: str = "ufl_tiny", pad_to=None) -> BipartiteCSR:
+    """A committed fixture instance from ``fixtures/<name>.mtx``."""
+    return load_mtx(os.path.join(FIXTURE_DIR, f"{name}.mtx"), pad_to=pad_to)

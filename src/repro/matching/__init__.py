@@ -30,6 +30,8 @@ from .state import MatchState, MatchStats
 from .warmstart import WARM_STARTS, register_warm_start, warm_start_names
 from .api import Matcher, match_many, maximum_matching_device
 from .sharded import ShardedMatcher, match_sharded, mesh_cache_key
+from .paths import (SOLVE_PATHS, SolvePath, register_solve_path,
+                    solve_path_names, unregister_solve_path)
 from .cache import (compile_cache_clear, compile_cache_info,
                     compile_cache_key, get_compiled)
 
@@ -38,6 +40,8 @@ __all__ = [
     "DeviceCSR", "MatchState", "MatchStats",
     "Matcher", "match_many", "maximum_matching_device",
     "ShardedMatcher", "match_sharded", "mesh_cache_key",
+    "SOLVE_PATHS", "SolvePath", "register_solve_path",
+    "solve_path_names", "unregister_solve_path",
     "WARM_STARTS", "register_warm_start", "warm_start_names",
     "compile_cache_clear", "compile_cache_info", "compile_cache_key",
     "get_compiled",

@@ -73,6 +73,15 @@ class MatcherConfig:
     # matching.  Composes with ShardedMatcher (per-shard pull over the CSC
     # shard, the one per-level pmin unchanged).  Mutually exclusive with
     # `adaptive_frontier`, which it generalizes.
+    # The alpha/beta defaults come from the committed corpus sweep
+    # (BENCH_PR7.json, ``corpus.alpha_sweep`` / ``_summary`` rows, tiny
+    # scale; regenerate via benchmarks/run.py --update-baseline): 8/32 ties
+    # the best geomean across the 10-family corpus (0.997 vs push-only) and
+    # is the clear winner on the long-diameter families (grid 0.699) where
+    # pull tile-skipping pays; RCP permutation erases most of that win
+    # (grid_rcp 0.951), which is the paper's locality story.  The per-family
+    # rows are gated in CI (``corpus.heuristic``), so changing these
+    # defaults without refreshing the baseline fails the bench gate.
     dirop: bool = False
     dirop_alpha: float = 8.0
     dirop_beta: float = 32.0

@@ -1,0 +1,259 @@
+"""repro.corpus (ISSUE 7): instance families, the mtx fixture, the
+differential fuzz harness (solve paths x warm starts x families), the
+failure-artifact minimizer, and the per-family dirop heuristic gate."""
+import dataclasses
+import functools
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (MatcherConfig, cheap_matching, hopcroft_karp,
+                        maximum_cardinality, pfp, push_relabel,
+                        validate_matching)
+from repro.corpus import corpus_instances, verify_corpus
+from repro.corpus.heuristic import modelled_rel, sweep_grid, trace_instance
+from repro.corpus.verify import (ARTIFACT_SCHEMA, minimize_failing_edges,
+                                 oracle_cardinality, shared_bucket)
+from repro.graphs import (INSTANCE_FAMILIES, comb_chain, community_graph,
+                          instance_sets, load_mtx, mtx_fixture)
+from repro.graphs.mtx import FIXTURE_DIR
+from repro.matching import (SOLVE_PATHS, register_solve_path,
+                            unregister_solve_path)
+
+CORPUS_FAMILIES = INSTANCE_FAMILIES + ("mtx",)
+
+
+@functools.lru_cache(maxsize=None)
+def _mini():
+    return corpus_instances("mini", rcp=True)
+
+
+# ---------------------------------------------------------------------------
+# new instance families: structure
+# ---------------------------------------------------------------------------
+def test_comb_chain_is_a_bfs_worst_case():
+    """The adversarial comb: greedy leaves exactly one free column whose only
+    augmenting path alternates down the whole spine, so the solver must run
+    O(length) BFS levels — teeth must not shortcut it."""
+    L = 64
+    g = comb_chain(L, teeth=16, seed=7)
+    assert g.nc == L + 1
+    opt = maximum_cardinality(g)
+    assert opt == L + 1                       # a perfect column matching exists
+    cm, rm = cheap_matching(g)
+    assert validate_matching(g, cm, rm) == L  # greedy deficiency exactly 1
+    tr = trace_instance(g, warm_start="cheap")
+    assert tr.levels >= L // 2                # the long path really is walked
+
+
+def test_comb_chain_teethless_and_rcp():
+    g = comb_chain(32, teeth=0, seed=1)
+    assert maximum_cardinality(g) == 33
+    assert maximum_cardinality(g.permuted(3)) == 33
+
+
+def test_community_graph_blocks_are_real():
+    nc = nr = 192
+    blocks = 6
+    g = community_graph(nc, nr, blocks=blocks, avg_deg=3.0, p_in=1.0, seed=3)
+    assert (g.nc, g.nr) == (nc, nr) and g.nnz > 0
+    cols, rows = g.ecol[: g.nnz], g.cadj[: g.nnz]
+    cblk = cols.astype(np.int64) * blocks // nc
+    # p_in=1.0: every edge stays inside its column's diagonal block
+    assert np.all(rows >= cblk * nr // blocks)
+    assert np.all(rows < (cblk + 1) * nr // blocks)
+    mixed = community_graph(nc, nr, blocks=blocks, avg_deg=3.0, p_in=0.5,
+                            seed=3)
+    blk = (mixed.ecol[: mixed.nnz].astype(np.int64) * blocks // nc)
+    inside = ((mixed.cadj[: mixed.nnz] >= blk * nr // blocks)
+              & (mixed.cadj[: mixed.nnz] < (blk + 1) * nr // blocks))
+    assert 0 < inside.sum() < mixed.nnz       # p_in<1 actually mixes
+
+
+def test_mtx_fixture_loads_committed_file():
+    g = mtx_fixture()
+    assert (g.nc, g.nr, g.nnz) == (14, 16, 30)
+    assert maximum_cardinality(g) == 10
+    g2 = load_mtx(f"{FIXTURE_DIR}/ufl_tiny.mtx")
+    np.testing.assert_array_equal(g.ecol[: g.nnz], g2.ecol[: g2.nnz])
+    np.testing.assert_array_equal(g.cadj[: g.nnz], g2.cadj[: g2.nnz])
+    assert mtx_fixture(pad_to=256).nnz_pad == 256
+
+
+def test_instance_sets_unified_across_scales():
+    """Satellite (a): every scale exposes the SAME family list, and rcp=True
+    appends an RCP twin per family with identical maximum cardinality."""
+    for scale in ("mini", "tiny"):
+        insts = instance_sets(scale)
+        assert tuple(insts) == INSTANCE_FAMILIES, scale
+    both = instance_sets("mini", rcp=True)
+    assert set(both) == (set(INSTANCE_FAMILIES)
+                         | {f"{k}_rcp" for k in INSTANCE_FAMILIES})
+    for k in INSTANCE_FAMILIES:
+        assert (maximum_cardinality(both[k])
+                == maximum_cardinality(both[f"{k}_rcp"])), k
+
+
+# ---------------------------------------------------------------------------
+# satellite (b): sequential oracles agree across the corpus
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rcp", ["orig", "rcp"])
+@pytest.mark.parametrize("family", CORPUS_FAMILIES)
+def test_oracles_agree_on_cardinality(family, rcp):
+    g = _mini()[family if rcp == "orig" else f"{family}_rcp"]
+    opt = maximum_cardinality(g)              # scipy's C Hopcroft-Karp
+    for oracle in (hopcroft_karp, pfp, push_relabel):
+        cm, rm = oracle(g)
+        assert validate_matching(g, cm, rm) == opt, oracle.__name__
+
+
+# ---------------------------------------------------------------------------
+# tentpole: the differential fuzz harness
+# ---------------------------------------------------------------------------
+def test_corpus_instances_and_shared_bucket():
+    insts = _mini()
+    assert len(insts) == 2 * len(CORPUS_FAMILIES)
+    nc, nr, cap = shared_bucket(insts.values())
+    assert all(g.nc <= nc and g.nr <= nr and g.nnz_pad <= cap
+               for g in insts.values())
+    assert oracle_cardinality(insts["mtx"]) == 10
+    sub = corpus_instances("mini", families=("rand", "comb"))
+    assert set(sub) == {"rand", "comb", "rand_rcp", "comb_rcp"}
+
+
+def test_fuzz_smoke_two_paths(tmp_path):
+    report = verify_corpus(scale="mini", paths=("jnp", "dirop"),
+                           warm_starts=("cheap",),
+                           families=("rand", "comb", "mtx"),
+                           artifact_dir=str(tmp_path))
+    assert len(report.results) == 3 * 2 * 2   # families x rcp x paths
+    assert not report.failures, report.summary()
+    assert "12/12 cells ok" in report.summary()
+
+
+def test_fuzz_budget_rotates_path_coverage(tmp_path):
+    report = verify_corpus(scale="mini", warm_starts=("cheap",),
+                           families=("rand", "sparse", "grid", "comb",
+                                     "band", "kron", "free"),
+                           rcp=False, budget=7, artifact_dir=str(tmp_path))
+    assert not report.failures, report.summary()
+    # one cell per instance, path order rotated: all 7 paths under budget 7
+    assert {r.path for r in report.results} == set(SOLVE_PATHS)
+
+
+@pytest.mark.slow
+def test_fuzz_full_matrix_mini(tmp_path):
+    """Acceptance: every registered solve path x warm start over the full
+    mini corpus (orig + RCP), cardinality == the Hopcroft-Karp oracle."""
+    report = verify_corpus(scale="mini", artifact_dir=str(tmp_path))
+    assert len(report.results) == (2 * len(CORPUS_FAMILIES)
+                                   * len(SOLVE_PATHS) * 2)
+    assert not report.failures, report.summary()
+
+
+def test_broken_path_dumps_minimized_artifact(tmp_path):
+    """A deliberately broken path (drops one matched pair) must be caught on
+    every instance, ddmin-minimized, and dumped as a replayable artifact."""
+    def broken(g, base=MatcherConfig(), warm_start="cheap"):
+        cm, rm = SOLVE_PATHS["jnp"].run_host(g, base=base,
+                                             warm_start=warm_start)
+        cm, rm = cm.copy(), rm.copy()
+        c = int(np.argmax(cm >= 0))
+        rm[cm[c]] = -1
+        cm[c] = -1
+        return cm, rm
+
+    register_solve_path("broken", runner=broken)
+    try:
+        report = verify_corpus(scale="mini", paths=("broken",),
+                               warm_starts=("cheap",), families=("mtx",),
+                               rcp=False, artifact_dir=str(tmp_path),
+                               minimize_budget=32)
+    finally:
+        unregister_solve_path("broken")
+    assert "broken" not in SOLVE_PATHS
+    (fail,) = report.failures
+    assert fail.cardinality == fail.expected - 1 == 9
+    with open(fail.artifact) as f:
+        art = json.load(f)
+    assert art["schema"] == ARTIFACT_SCHEMA
+    assert art["minimized"] and art["path"] == "broken"
+    assert (art["expected"], art["got"]) == (10, 9)
+    # off-by-one reproduces on any matchable subgraph, so ddmin should get
+    # close to a single edge well within the budget
+    assert 1 <= len(art["edges"]) <= 4
+    for c, r in art["edges"]:
+        assert 0 <= c < art["nc"] and 0 <= r < art["nr"]
+
+
+def test_minimizer_respects_budget_and_predicate():
+    edges = np.stack([np.arange(16) % 4, np.arange(16) % 5], axis=1)
+    calls = []
+
+    def fails(cand):
+        calls.append(len(cand))
+        return any((c, r) == (3, 3) for c, r in cand.tolist())
+
+    out = minimize_failing_edges(edges[:, 0], edges[:, 1], 4, 5, fails,
+                                 max_checks=50)
+    assert fails(out) and len(out) <= 2
+    assert len(calls) <= 52
+
+
+# ---------------------------------------------------------------------------
+# tentpole: the per-family heuristic gate
+# ---------------------------------------------------------------------------
+def test_heuristic_model_anchors():
+    g = _mini()["rand"]
+    tr = trace_instance(g, warm_start="cheap")
+    assert tr.levels >= 1 and tr.nnz_pad == g.nnz_pad
+    rel, pulls = modelled_rel(tr, 1e-6, 1e-6)     # never pull == push-only
+    assert rel == 1.0 and pulls == 0
+    rel_all, pulls_all = modelled_rel(tr, 1e6, 1e6)
+    # always-pull pulls every level with a live frontier (fe > 0); empty-
+    # frontier closing levels still push since fe*alpha > pe can't hold
+    live = sum(1 for ph in tr.phases for fe, pe, _ in ph if fe * 1e6 > pe)
+    assert pulls_all == live and 0 < live <= tr.levels
+    assert rel_all != 1.0
+    assert (1e-6, 1e-6) in sweep_grid() and (8.0, 32.0) in sweep_grid()
+
+
+def test_heuristic_gate_catches_broken_alpha():
+    """Acceptance: a deliberately broken dirop_alpha/beta (always-pull) must
+    fail benchmarks.run's regression gate on the corpus.heuristic rows,
+    exactly like a perf regression — and the defaults must not."""
+    from benchmarks import run as bench_run
+    from benchmarks.corpus import heuristic_rows
+
+    assert "corpus" in bench_run.BENCHES
+    assert "corpus" in bench_run.REGRESSION_BENCHES
+    assert "corpus.heuristic" in bench_run.GATED_SETS
+
+    insts = corpus_instances("mini", families=("rand", "sparse"))
+    good, traces = heuristic_rows(insts)          # shipped defaults (8, 32)
+    bad, _ = heuristic_rows(insts, traces=traces, alpha=1e6, beta=1e6)
+    baseline = {"benches": {"corpus": good}}
+    assert len(bench_run._rel_index(baseline, "corpus")) == len(insts)
+
+    fails = bench_run.check_regressions(
+        baseline, {"benches": {"corpus": bad}}, tolerance=0.02)
+    assert fails and all("corpus" in f for f in fails)
+    # same thresholds: bit-identical rows, no false positive even at 0%
+    assert not bench_run.check_regressions(
+        baseline, {"benches": {"corpus": good}}, tolerance=0.0)
+    # a vanished family row is itself a failure (no silently narrower gate)
+    fewer, _ = heuristic_rows(
+        {"rand": insts["rand"]}, traces={"rand": traces["rand"]})
+    assert bench_run.check_regressions(
+        baseline, {"benches": {"corpus": fewer}}, tolerance=0.02)
+
+
+def test_corpus_bench_registered_in_harness():
+    from benchmarks import run as bench_run
+    assert bench_run.BENCHES["corpus"].__module__ == "benchmarks.corpus"
+    # gated sets must survive the CSV round-trip used by --json artifacts
+    recs = bench_run._records(["corpus.heuristic,family,set,rel",
+                               "corpus.heuristic,grid,orig,0.700"])
+    assert recs == [("corpus.heuristic",
+                     {"family": "grid", "set": "orig", "rel": "0.700"})]

@@ -37,7 +37,7 @@ from repro.kernels.frontier_expand import (frontier_expand,
                                            frontier_expand_pull,
                                            frontier_expand_pull_ref,
                                            resolve_interpret)
-from repro.matching import DeviceCSR, Matcher
+from repro.matching import DeviceCSR, Matcher, SOLVE_PATHS
 from repro.matching.solve import (IINF, _alternate, default_block_edges,
                                   level0_state, scatter_min)
 
@@ -189,13 +189,17 @@ def _encoding_matrix():
     return sorted(out.values(), key=lambda c: (c.name, c.wr_exact))
 
 
-PATHS = {
-    "pallas_fused": dict(use_pallas=True),
-    "pallas_legacy": dict(use_pallas=True, pallas_fused=False),
-    "adaptive": dict(adaptive_frontier=True, compact_cap=64, compact_dmax=8),
-    "dirop": dict(dirop=True, pull_cap=64, pull_dmax=8),
-    "dirop_pallas": dict(dirop=True, use_pallas=True),
-}
+# the registered solve paths ARE the sweep-path list: anything added to
+# repro.matching.SOLVE_PATHS is automatically held to the bit-identical
+# contract here (jnp is the reference; sharded re-dispatches these configs)
+PATHS = {name: dict(p.overrides)
+         for name, p in SOLVE_PATHS.items()
+         if not p.sharded and p.runner is None and name != "jnp"}
+
+
+def test_registry_covers_every_single_device_path():
+    assert set(PATHS) == {"legacy", "fused", "adaptive", "dirop",
+                          "dirop_pallas"}
 
 
 @pytest.mark.parametrize("cfg", _encoding_matrix(), ids=lambda c:

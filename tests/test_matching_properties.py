@@ -12,6 +12,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core import (BipartiteCSR, MatcherConfig, cheap_matching_jax,
                         maximum_cardinality, maximum_matching,
                         validate_matching)
+from repro.matching import SOLVE_PATHS
 
 CONFIGS = [
     MatcherConfig(algo="apfb", kernel="gpubfs"),
@@ -83,4 +84,69 @@ def test_property_ks_valid_and_matcher_from_ks(g):
     cm0, rm0 = karp_sipser_jax(g)
     validate_matching(g, cm0, rm0)
     cm, rm, _ = maximum_matching(g, MatcherConfig(), cm0, rm0)
+    assert validate_matching(g, cm, rm) == maximum_cardinality(g)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 7 satellites: container, CSC mirror, and solve-path registry
+# ---------------------------------------------------------------------------
+@st.composite
+def edge_lists(draw):
+    nc = draw(st.integers(1, 48))
+    nr = draw(st.integers(1, 48))
+    nnz = draw(st.integers(1, 192))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, nc, size=nnz), rng.integers(0, nr, size=nnz),
+            nc, nr)
+
+
+@settings(max_examples=30, deadline=None)
+@given(e=edge_lists())
+def test_property_from_edges_dedup_round_trips(e):
+    """from_edges keeps exactly the distinct (col, row) pairs, column-sorted,
+    with cxadj consistent with the edge-parallel view."""
+    cols, rows, nc, nr = e
+    g = BipartiteCSR.from_edges(cols, rows, nc, nr)
+    want = {(int(c), int(r)) for c, r in zip(cols, rows)}
+    got = list(zip(g.ecol[: g.nnz].tolist(), g.cadj[: g.nnz].tolist()))
+    assert set(got) == want and len(got) == g.nnz == len(want)
+    assert np.all(np.diff(g.ecol[: g.nnz]) >= 0)
+    np.testing.assert_array_equal(
+        np.searchsorted(g.ecol[: g.nnz], np.arange(nc + 1)), g.cxadj)
+    # padding edges are inert sentinels
+    assert np.all(g.ecol[g.nnz:] == nc) and np.all(g.cadj[g.nnz:] == nr)
+
+
+@settings(max_examples=25, deadline=None)
+@given(e=edge_lists())
+def test_property_csc_mirror_equals_host_transpose(e):
+    """with_csc() == the host transpose, and eperm is a true permutation
+    carrying each row-sorted slot back to its CSR edge."""
+    from repro.matching import DeviceCSR
+    cols, rows, nc, nr = e
+    g = BipartiteCSR.from_edges(cols, rows, nc, nr)
+    d = DeviceCSR.from_host(g).with_csc()
+    t = g.transpose()
+    np.testing.assert_array_equal(np.asarray(d.rxadj), t.cxadj)
+    np.testing.assert_array_equal(np.asarray(d.radj)[: g.nnz],
+                                  t.cadj[: t.nnz])
+    np.testing.assert_array_equal(np.asarray(d.erow)[: g.nnz],
+                                  t.ecol[: t.nnz])
+    perm = np.asarray(d.eperm)
+    assert np.array_equal(np.sort(perm), np.arange(g.nnz_pad))
+    np.testing.assert_array_equal(np.asarray(d.cadj)[perm],
+                                  np.asarray(d.erow))
+    np.testing.assert_array_equal(np.asarray(d.ecol)[perm],
+                                  np.asarray(d.radj))
+
+
+@settings(max_examples=12, deadline=None)
+@given(e=edge_lists(), path=st.sampled_from(sorted(SOLVE_PATHS)))
+def test_property_every_solve_path_valid_and_maximum(e, path):
+    """Any registered solve path on any random graph returns a VALID maximum
+    matching (fixed pad bucket: one compiled program per path)."""
+    cols, rows, nc, nr = e
+    g = BipartiteCSR.from_edges(cols, rows, nc, nr)
+    cm, rm = SOLVE_PATHS[path].run_host(g, pad=(48, 48, 512))
     assert validate_matching(g, cm, rm) == maximum_cardinality(g)

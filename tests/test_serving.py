@@ -7,7 +7,8 @@ import numpy as np
 import pytest
 
 from repro.core import validate_matching
-from repro.graphs import (grid_graph, kron_graph, random_bipartite,
+from repro.graphs import (banded, comb_chain, community_graph, grid_graph,
+                          kron_graph, mtx_fixture, random_bipartite,
                           scaled_free)
 from repro.matching import (DeviceCSR, Matcher, MatcherConfig,
                             compile_cache_clear, compile_cache_info)
@@ -21,13 +22,17 @@ BUCKET = SizeBucket(256, 256, 2048)
 
 
 def families():
-    """The four generator families standing in for the paper's UFL classes,
-    all sized to share one declared bucket."""
+    """One instance of every corpus generator family standing in for the
+    paper's UFL classes, all sized to share one declared bucket."""
     return {
         "random": random_bipartite(200, 180, 3.0, seed=1),
         "kron": kron_graph(7, 6, seed=2),
         "grid": grid_graph(12),
         "free": scaled_free(150, 160, 4.0, seed=3),
+        "band": banded(200, band=3, density=0.5, seed=5),
+        "community": community_graph(192, 192, blocks=6, avg_deg=3.0, seed=6),
+        "comb": comb_chain(96, teeth=16, seed=7),
+        "mtx": mtx_fixture(),
     }
 
 
@@ -155,6 +160,21 @@ def test_service_parity_across_generator_families():
         snap = svc.metrics.snapshot()
     assert snap["completed"] == len(fams)
     assert 1 <= snap["dispatches"] <= len(fams)
+
+
+@pytest.mark.parametrize("family", sorted(families()))
+def test_service_submit_matches_direct_matcher(family):
+    """Per-corpus-family: one submit() through the full admission/batching
+    path returns exactly the direct Matcher's cardinality and a valid
+    matching on the ORIGINAL (unpadded) vertex ranges."""
+    g = families()[family]
+    with MatchingService(bucketizer=Bucketizer((BUCKET,)), config=CFG,
+                         warm_start="cheap", max_batch=2,
+                         max_delay_ms=5.0) as svc:
+        res = svc.submit(g).result(timeout=300)
+    assert res.cardinality == direct_cardinality(g)
+    cm, rm = res.matching()
+    assert validate_matching(g, cm, rm) == res.cardinality
 
 
 def test_service_deadline_flush_resolves_single_request():
