@@ -57,9 +57,12 @@ BENCHES = {
 # so an alpha/beta heuristic regression fails the gate exactly like a perf
 # regression — run that bench with a much tighter --tolerance than the
 # timing-based perf_smoke sets (CI uses separate --only invocations).
-REGRESSION_BENCHES = ("perf_smoke", "corpus")
+# serving.overload_summary gates the overload posture (loss rate past
+# saturation as rel); it stays dormant against baselines that predate it
+# (no matching rows -> skipped) until the baseline artifact is refreshed.
+REGRESSION_BENCHES = ("perf_smoke", "corpus", "serving")
 GATED_SETS = ("perf_smoke.sweep_summary", "perf_smoke.solve",
-              "corpus.heuristic")
+              "corpus.heuristic", "serving.overload_summary")
 
 SCHEMA = "repro-bench/1"
 

@@ -5,7 +5,8 @@ Host-centric compat surface (numpy in/out).  The device-resident API —
 ``match_many`` — lives in :mod:`repro.matching` and is re-exported here for
 convenience.
 """
-from .csr import BipartiteCSR, validate_matching, UNMATCHED, ENDPOINT
+from .csr import (BipartiteCSR, is_maximal, validate_matching,
+                  UNMATCHED, ENDPOINT)
 from .matcher import MatcherConfig, VARIANTS, maximum_matching
 from .cheap import cheap_matching_jax
 from .karp_sipser import karp_sipser_jax
@@ -15,7 +16,8 @@ from repro.matching import (DeviceCSR, Matcher, MatchState, MatchStats,
                             match_many)
 
 __all__ = [
-    "BipartiteCSR", "validate_matching", "UNMATCHED", "ENDPOINT",
+    "BipartiteCSR", "is_maximal", "validate_matching", "UNMATCHED",
+    "ENDPOINT",
     "MatcherConfig", "VARIANTS", "maximum_matching", "cheap_matching_jax",
     "cheap_matching", "hopcroft_karp", "pfp", "maximum_cardinality",
     "push_relabel", "karp_sipser_jax",

@@ -134,3 +134,19 @@ def validate_matching(g: BipartiteCSR, cmatch: np.ndarray, rmatch: np.ndarray) -
             continue
         assert 0 <= c < g.nc and int(cmatch[c]) == r, f"asymmetric match r={r} c={c}"
     return card
+
+
+def is_maximal(g: BipartiteCSR, cmatch: np.ndarray, rmatch: np.ndarray
+               ) -> bool:
+    """True iff no edge joins a free column to a free row.
+
+    The weaker-than-maximum guarantee a phase-budget-truncated solve keeps
+    (``MatcherConfig(max_phases=k, degrade_maximal=True)``): a maximal
+    matching is at least half the maximum, so it is the principled
+    degradation target under deadline pressure (Birn et al.).
+    """
+    cmatch = np.asarray(cmatch)[: g.nc]
+    rmatch = np.asarray(rmatch)[: g.nr]
+    cols, rows = g.ecol[: g.nnz], g.cadj[: g.nnz]
+    return not bool(np.any((cmatch[cols] == UNMATCHED)
+                           & (rmatch[rows] == UNMATCHED)))

@@ -50,5 +50,6 @@ def maximum_matching(
     out = Matcher(cfg).run(graph, state)
     cmatch, rmatch = out.to_host()
     stats = {"phases": int(out.phases), "fallbacks": int(out.fallbacks),
-             "cardinality": int((cmatch >= 0).sum()), "variant": cfg.name}
+             "cardinality": int((cmatch >= 0).sum()),
+             "certified": bool(out.certified), "variant": cfg.name}
     return cmatch, rmatch, stats

@@ -35,7 +35,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.csr import BipartiteCSR, validate_matching
+from repro.core.csr import BipartiteCSR, is_maximal, validate_matching
 from repro.core.oracles import hopcroft_karp
 from repro.graphs import instance_sets, mtx_fixture
 from repro.matching import SOLVE_PATHS, MatcherConfig
@@ -138,11 +138,21 @@ def minimize_failing_edges(cols, rows, nc: int, nr: int,
 
 
 def _run_cell(path, g: BipartiteCSR, base: MatcherConfig, ws: str,
-              pad) -> Tuple[int, str]:
-    """(cardinality, error) for one solve; -1 cardinality on exception."""
+              pad, oracle: str = "maximum") -> Tuple[int, str]:
+    """(cardinality, error) for one solve; -1 cardinality on exception.
+
+    ``oracle`` picks the contract checked beyond validity:
+    ``"maximum"`` (default) leaves the cardinality comparison to the
+    caller; ``"maximal"`` — the degraded-mode contract of a
+    ``max_phases``-budgeted solve — additionally asserts no free column
+    shares an edge with a free row.
+    """
     try:
         cm, rm = path.run_host(g, base=base, warm_start=ws, pad=pad)
-        return int(validate_matching(g, cm, rm)), ""
+        card = int(validate_matching(g, cm, rm))
+        if oracle == "maximal" and not is_maximal(g, cm, rm):
+            return card, "not maximal: a free column-free row edge remains"
+        return card, ""
     except Exception as e:  # noqa: BLE001 — fuzzing: any failure is a finding
         return -1, f"{type(e).__name__}: {e}"
 
@@ -177,13 +187,21 @@ def verify_corpus(scale: str = "mini",
                   artifact_dir: str = ".",
                   budget: Optional[int] = None,
                   minimize: bool = True,
-                  minimize_budget: int = 64) -> FuzzReport:
+                  minimize_budget: int = 64,
+                  oracle: str = "maximum") -> FuzzReport:
     """Run the differential matrix; never raises — read ``.failures``.
 
     ``budget`` caps the number of (instance, path, warm start) cells; the
     enumeration rotates the path order per instance so a small budget still
     touches every solve path early.
+
+    ``oracle="maximum"`` (default) demands Hopcroft-Karp cardinality;
+    ``oracle="maximal"`` is the degraded-mode gate for phase-budgeted
+    configs (``base.max_phases`` small): the matching must be valid,
+    maximal, and no larger than the true maximum.
     """
+    if oracle not in ("maximum", "maximal"):
+        raise ValueError(f"unknown oracle {oracle!r}")
     insts = corpus_instances(scale, rcp=rcp, rcp_seed=seed,
                              families=families)
     names = list(paths) if paths is not None else list(SOLVE_PATHS)
@@ -202,10 +220,12 @@ def verify_corpus(scale: str = "mini",
     for iname, pn, ws in cells:
         g = insts[iname]
         path = SOLVE_PATHS[pn]
-        card, err = _run_cell(path, g, base, ws, pad)
+        card, err = _run_cell(path, g, base, ws, pad, oracle=oracle)
+        ok = not err and (card <= expected[iname] if oracle == "maximal"
+                          else card == expected[iname])
         res = CellResult(instance=iname, path=pn, warm_start=ws,
                          expected=expected[iname], cardinality=card,
-                         ok=(not err and card == expected[iname]), error=err)
+                         ok=ok, error=err)
         if not res.ok:
             edges = np.stack([g.ecol[: g.nnz], g.cadj[: g.nnz]], axis=1)
             minimized = False
@@ -217,7 +237,9 @@ def verify_corpus(scale: str = "mini",
                 def fails(cand):
                     gg = BipartiteCSR.from_edges(cand[:, 0], cand[:, 1],
                                                  g.nc, g.nr)
-                    c, e = _run_cell(path, gg, base, ws, mpad)
+                    c, e = _run_cell(path, gg, base, ws, mpad, oracle=oracle)
+                    if oracle == "maximal":
+                        return bool(e) or c > oracle_cardinality(gg)
                     return bool(e) or c != oracle_cardinality(gg)
 
                 edges = minimize_failing_edges(
@@ -247,16 +269,30 @@ def main(argv=None) -> int:
                     help="max cells to run (0 = the full matrix)")
     ap.add_argument("--artifact-dir", default=".")
     ap.add_argument("--minimize-budget", type=int, default=64)
+    ap.add_argument("--oracle", default="maximum",
+                    choices=["maximum", "maximal"],
+                    help="maximal = degraded-mode gate: valid + maximal + "
+                         "card <= HK optimum (use with --max-phases)")
+    ap.add_argument("--max-phases", type=int, default=0,
+                    help="phase budget for the base config (0 = unlimited); "
+                         "implies degrade_maximal when --oracle maximal")
     args = ap.parse_args(argv)
+    base = MatcherConfig()
+    if args.max_phases:
+        base = dataclasses.replace(
+            base, max_phases=args.max_phases,
+            degrade_maximal=args.oracle == "maximal")
     report = verify_corpus(
         scale=args.scale,
         paths=args.paths.split(",") if args.paths else None,
         warm_starts=tuple(args.warm_starts.split(",")),
         rcp=not args.no_rcp, seed=args.seed,
         families=args.families.split(",") if args.families else None,
+        base=base,
         artifact_dir=args.artifact_dir,
         budget=args.budget or None,
-        minimize_budget=args.minimize_budget)
+        minimize_budget=args.minimize_budget,
+        oracle=args.oracle)
     print(report.summary(), flush=True)
     return 1 if report.failures else 0
 

@@ -9,10 +9,17 @@ warmup, per-family, and service-level metrics.
 
     python -m repro.launch.serve_matching --smoke          # CI smoke
     python -m repro.launch.serve_matching --rate 500 --requests 256
+    python -m repro.launch.serve_matching --smoke --chaos  # + fault drill
 
 ``--smoke`` shrinks the trace, asserts cardinality parity against a direct
 ``Matcher`` for every request, and (on a multi-device host) exercises the
-oversize → ShardedMatcher admission route.
+oversize → ShardedMatcher admission route.  ``--chaos`` arms a seeded
+:class:`repro.serving.FaultInjector` and, after the replay, runs a fault
+drill: poisons one tagged request among innocents (asserting bisection
+isolates exactly it), then kills the flush thread mid-batch (asserting the
+supervisor fails the in-flight futures and restarts, and later submits are
+served).  Exit status is non-zero if any fault-tolerance contract is
+violated.
 """
 from __future__ import annotations
 
@@ -26,8 +33,9 @@ from repro.core.csr import BipartiteCSR
 from repro.graphs import (grid_graph, kron_graph, random_bipartite,
                           scaled_free)
 from repro.matching import DeviceCSR, Matcher, MatcherConfig
-from repro.serving import (Bucketizer, MatchingService, SizeBucket, ladder,
-                           percentile)
+from repro.serving import (Bucketizer, FaultInjector, FlushThreadDiedError,
+                           MatchingService, PoisonedGraphFault, SizeBucket,
+                           ladder, percentile)
 
 FAMILIES: Dict[str, Callable[[int, int], BipartiteCSR]] = {
     # name -> (size hint n, seed) -> instance
@@ -62,6 +70,50 @@ def replay(service: MatchingService, trace, rate_rps: float, seed: int):
     return futures
 
 
+def chaos_drill(service: MatchingService, injector: FaultInjector,
+                size: int, seed: int) -> int:
+    """The two headline fault drills; returns the number of contract
+    violations (0 = the failure model held)."""
+    failures = 0
+    graphs = [random_bipartite(size, size - size // 8, 3.0, seed=seed + 7000 + i)
+              for i in range(6)]
+
+    # 1. poisoned batch: bisection must isolate exactly the tagged request
+    injector.poison("bad")
+    futs = [service.submit(g, tag="bad" if i == 2 else None)
+            for i, g in enumerate(graphs)]
+    service.drain()
+    for i, fut in enumerate(futs):
+        exc = fut.exception(timeout=60)
+        if i == 2 and not isinstance(exc, PoisonedGraphFault):
+            print(f"[chaos] poisoned request resolved {exc!r}, "
+                  "expected PoisonedGraphFault")
+            failures += 1
+        elif i != 2 and exc is not None:
+            print(f"[chaos] innocent co-batched request {i} failed: {exc!r}")
+            failures += 1
+    injector.cure("bad")
+
+    # 2. flush-thread death: supervisor fails in-flight, restarts, serves
+    injector.kill_thread_after(0)       # the very next dispatch dies
+    futs = [service.submit(g) for g in graphs[:4]]
+    service.flush()
+    died = sum(isinstance(f.exception(timeout=60), FlushThreadDiedError)
+               for f in futs)
+    res = service.submit(graphs[0]).result(timeout=60)   # post-restart
+    snap = service.metrics.snapshot()
+    print(f"[chaos] quarantined={snap['quarantined']} "
+          f"restarts={snap['restarts']} in-flight-failed={died} "
+          f"post-restart |M|={res.cardinality}")
+    if snap["quarantined"] < 1:
+        print("[chaos] FAIL: poisoned request was not quarantined")
+        failures += 1
+    if snap["restarts"] < 1 or died < 1:
+        print("[chaos] FAIL: supervisor did not fail over + restart")
+        failures += 1
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="replay synthetic open-loop traffic at the service")
@@ -75,6 +127,12 @@ def main(argv=None) -> int:
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--delay-ms", type=float, default=2.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chaos", action="store_true",
+                    help="arm a FaultInjector and run the fault drill "
+                         "(poison isolation + flush-thread death/restart) "
+                         "after the replay")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="FaultInjector seed (deterministic fault schedule)")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -88,12 +146,14 @@ def main(argv=None) -> int:
     mesh = None
     if jax.device_count() > 1:
         mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    injector = FaultInjector(seed=args.chaos_seed) if args.chaos else None
     service = MatchingService(
         bucketizer=Bucketizer(buckets,
-                              oversize="shard" if mesh else "reject"),
+                              oversize="shard" if mesh else "reject",
+                              validate=True),
         config=MatcherConfig(algo="apfb", kernel="gpubfs_wr", schedule="ct"),
         warm_start="cheap", max_batch=args.max_batch,
-        max_delay_ms=args.delay_ms, mesh=mesh)
+        max_delay_ms=args.delay_ms, mesh=mesh, faults=injector)
     report = service.warm_up()
     print(f"[serve_matching] {report}")
 
@@ -129,6 +189,9 @@ def main(argv=None) -> int:
         print(f"[serve_matching] oversize route={res.route} "
               f"|M|={res.cardinality} ({'ok' if ok else 'FAIL'})")
         failures += 0 if ok else 1
+
+    if args.chaos:
+        failures += chaos_drill(service, injector, args.size, args.seed)
 
     snap = service.metrics.snapshot()
     service.close()

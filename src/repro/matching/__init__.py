@@ -25,7 +25,7 @@ package.  ``docs/architecture.md`` documents the design; ``docs/paper_map.md``
 maps every paper algorithm to its implementation here.
 """
 from .config import MatcherConfig, VARIANTS
-from .device_csr import DeviceCSR
+from .device_csr import DeviceCSR, GraphValidationError, validate_structure
 from .state import MatchState, MatchStats
 from .warmstart import WARM_STARTS, register_warm_start, warm_start_names
 from .api import Matcher, match_many, maximum_matching_device
@@ -37,7 +37,8 @@ from .cache import (compile_cache_clear, compile_cache_info,
 
 __all__ = [
     "MatcherConfig", "VARIANTS",
-    "DeviceCSR", "MatchState", "MatchStats",
+    "DeviceCSR", "GraphValidationError", "validate_structure",
+    "MatchState", "MatchStats",
     "Matcher", "match_many", "maximum_matching_device",
     "ShardedMatcher", "match_sharded", "mesh_cache_key",
     "SOLVE_PATHS", "SolvePath", "register_solve_path",

@@ -83,11 +83,12 @@ class Matcher:
                     "it once with graph.with_csc() (serving admission does "
                     "this automatically for dirop configs)")
             kw.update(rxadj=graph.rxadj, radj=graph.radj, erow=graph.erow)
-        cm, rm, phases, fb = make_solver(self.config)(
+        cm, rm, phases, fb, cert = make_solver(self.config)(
             graph.ecol, graph.cadj, state.cmatch, state.rmatch, **kw)
         return MatchState(cmatch=cm, rmatch=rm,
                           phases=state.phases + phases,
-                          fallbacks=state.fallbacks + fb)
+                          fallbacks=state.fallbacks + fb,
+                          certified=cert)
 
     def _cache_tag(self, cold: bool):
         """Warm-start identity for the compile cache; versioned so that

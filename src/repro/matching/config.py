@@ -25,6 +25,16 @@ class MatcherConfig:
     wr_exact: bool = False      # the APsB-GPUBFS-WR refinement (negative-row encoding)
     use_pallas: bool = False    # route frontier expansion through the Pallas kernel
     max_phases: int = 0         # 0 = until maximum (bounded internally)
+    # When a positive max_phases budget exhausts before the solver certifies
+    # the matching maximum, run one extra greedy augmentation round
+    # (the `cheap` warm start's speculative pass, Birn-et-al maximal
+    # matching) over the truncated result so the degraded answer is at
+    # least MAXIMAL — no free column shares an edge with a free row.  The
+    # serving degradation ladder turns this on for deadline-bounded solves;
+    # it stays off by default because the corpus heuristic replay
+    # (corpus/heuristic.py) steps the solver with max_phases=1 and its
+    # CI-gated trajectories must not change under it.
+    degrade_maximal: bool = False
     # beyond-paper: bound the BFS tail after the first augmenting level.
     # 0 = paper-faithful (APsB stops immediately, APFB exhausts the
     # frontier); k>0 on APFB = expand at most k more levels — interpolates

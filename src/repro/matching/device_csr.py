@@ -39,6 +39,83 @@ if TYPE_CHECKING:  # avoid a circular import; only needed for annotations
 LANE = 128  # TPU lane width; every edge capacity is a multiple of this
 
 
+class GraphValidationError(ValueError):
+    """A graph's CSR arrays violate the structural invariants every kernel
+    assumes (monotone offsets, in-range endpoints, sentinel tail discipline).
+
+    Raised by :meth:`DeviceCSR.validate` and by serving admission
+    (``Bucketizer(validate=True)``) so a malformed or adversarial graph is
+    rejected before it can poison a batched dispatch.  ``problems`` keeps
+    the full finding list; ``str()`` shows them all.
+    """
+
+    def __init__(self, problems: Sequence[str]):
+        self.problems = tuple(problems)
+        super().__init__("invalid bipartite CSR: " + "; ".join(self.problems))
+
+
+def validate_structure(cxadj: np.ndarray, cadj: np.ndarray, ecol: np.ndarray,
+                       nnz: int, nc: int, nr: int) -> Tuple[str, ...]:
+    """Structural findings for one graph's host-side CSR arrays (empty tuple
+    = valid).  The checks mirror what the kernels silently assume:
+
+    * ``cxadj`` is (nc+1,), starts at 0, is monotone nondecreasing and ends
+      at the true edge count ``nnz`` (<= the padded capacity);
+    * real edge slots carry in-range endpoints (``cadj`` row ids < nr,
+      ``ecol`` column ids < nc) and ``ecol`` agrees with the offsets (edge
+      slot ``e`` of column ``c`` has ``ecol[e] == c``);
+    * padding slots carry the inert sentinels ``cadj = nr`` / ``ecol = nc``
+      — a padding edge with a real endpoint would propose phantom matches.
+
+    Out-of-range ids would otherwise be CLAMPED by the solver's guarded
+    gathers into silently-wrong matchings, which is exactly why admission
+    runs this before upload.
+    """
+    problems = []
+    cxadj = np.asarray(cxadj)
+    cadj = np.asarray(cadj)
+    ecol = np.asarray(ecol)
+    nnz_pad = int(cadj.shape[-1])
+    if cxadj.shape != (nc + 1,):
+        return (f"cxadj shape {cxadj.shape} != ({nc + 1},)",)
+    if ecol.shape != cadj.shape:
+        return (f"ecol shape {ecol.shape} != cadj shape {cadj.shape}",)
+    if not (0 <= nnz <= nnz_pad):
+        return (f"nnz {nnz} outside [0, nnz_pad={nnz_pad}]",)
+    if cxadj[0] != 0:
+        problems.append(f"cxadj[0] = {int(cxadj[0])} != 0")
+    if np.any(np.diff(cxadj) < 0):
+        bad = int(np.argmax(np.diff(cxadj) < 0))
+        problems.append(f"cxadj not monotone at column {bad}")
+    elif cxadj[-1] != nnz:
+        problems.append(f"cxadj[-1] = {int(cxadj[-1])} != nnz {nnz}")
+    real_r, real_c = cadj[:nnz], ecol[:nnz]
+    if np.any((real_r < 0) | (real_r >= nr)):
+        bad = int(np.argmax((real_r < 0) | (real_r >= nr)))
+        problems.append(
+            f"cadj[{bad}] = {int(real_r[bad])} outside rows [0, {nr})")
+    if np.any((real_c < 0) | (real_c >= nc)):
+        bad = int(np.argmax((real_c < 0) | (real_c >= nc)))
+        problems.append(
+            f"ecol[{bad}] = {int(real_c[bad])} outside columns [0, {nc})")
+    elif not problems and cxadj[-1] == nnz:
+        want = np.repeat(np.arange(nc, dtype=ecol.dtype), np.diff(cxadj))
+        if not np.array_equal(real_c, want):
+            bad = int(np.argmax(real_c != want))
+            problems.append(
+                f"ecol[{bad}] = {int(real_c[bad])} disagrees with cxadj "
+                f"(expected column {int(want[bad])})")
+    if np.any(cadj[nnz:] != nr):
+        bad = nnz + int(np.argmax(cadj[nnz:] != nr))
+        problems.append(
+            f"padding cadj[{bad}] = {int(cadj[bad])} != sentinel {nr}")
+    if np.any(ecol[nnz:] != nc):
+        bad = nnz + int(np.argmax(ecol[nnz:] != nc))
+        problems.append(
+            f"padding ecol[{bad}] = {int(ecol[bad])} != sentinel {nc}")
+    return tuple(problems)
+
+
 def bucket_nnz(nnz: int, lane: int = LANE) -> int:
     """Smallest power-of-two multiple of ``lane`` holding ``nnz`` edges."""
     cap = lane
@@ -122,6 +199,20 @@ class DeviceCSR:
                    cadj=put(np.asarray(cadj, np.int32)),
                    ecol=put(np.asarray(ecol, np.int32)),
                    nnz=put(np.int32(g.nnz)), nc=g.nc, nr=g.nr)
+
+    def validate(self) -> "DeviceCSR":
+        """Check the structural invariants (one host sync); returns ``self``
+        so it chains, raises :class:`GraphValidationError` otherwise.
+
+        Serving admission calls this via ``Bucketizer(validate=True)``; the
+        corpus harness and tests call it directly on suspect graphs.
+        """
+        assert not self.batch_shape, "validate() takes a single graph"
+        problems = validate_structure(self.cxadj, self.cadj, self.ecol,
+                                      int(self.nnz), self.nc, self.nr)
+        if problems:
+            raise GraphValidationError(problems)
+        return self
 
     def to_host(self) -> "BipartiteCSR":
         """Materialize back to the numpy container (one sync, for interop)."""

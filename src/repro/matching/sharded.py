@@ -37,6 +37,7 @@ from __future__ import annotations
 
 from typing import Optional
 
+import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ._compat import shard_map_no_check
@@ -125,8 +126,9 @@ class ShardedMatcher(Matcher):
                 in_specs += (P(), P(), P(self.axis), P(self.axis))
             smap = shard_map_no_check(
                 solve, self.mesh, in_specs=in_specs,
-                out_specs=(P(), P(), P(), P()))
+                out_specs=(P(), P(), P(), P(), P()))
             init = get_warm_start(self.warm_start)
+            cfg = self.config
 
             def fn(g: DeviceCSR, s: MatchState) -> MatchState:
                 self._check_state(g, s)
@@ -134,10 +136,23 @@ class ShardedMatcher(Matcher):
                 if cold:
                     cm, rm = init(g.ecol, g.cadj, cm, rm)
                 extra = ((g.cxadj, g.rxadj, g.radj, g.erow) if dirop else ())
-                cm, rm, phases, fb = smap(g.ecol, g.cadj, cm, rm, *extra)
+                cm, rm, phases, fb, cert = smap(g.ecol, g.cadj, cm, rm,
+                                                *extra)
+                if cfg.degrade_maximal and cfg.max_phases > 0:
+                    # Same budget-exhausted maximality repair as the
+                    # single-device solver, applied OUTSIDE the shard_map
+                    # region: cheap_init's scatter rounds need the whole
+                    # edge list, and like the warm start GSPMD partitions
+                    # them over the sharded arrays automatically.
+                    from .warmstart import cheap_init
+                    cm, rm = jax.lax.cond(
+                        cert, lambda cr: cr,
+                        lambda cr: cheap_init(g.ecol, g.cadj, *cr),
+                        (cm, rm))
                 return MatchState(cmatch=cm, rmatch=rm,
                                   phases=s.phases + phases,
-                                  fallbacks=s.fallbacks + fb)
+                                  fallbacks=s.fallbacks + fb,
+                                  certified=cert)
 
             return fn
 

@@ -482,7 +482,15 @@ def _cardinality(cmatch):
 # ---------------------------------------------------------------------------
 def make_solver(cfg: MatcherConfig, axis: Optional[str] = None):
     """Build the pure matcher ``(ecol, cadj, cmatch, rmatch[, cxadj]) ->
-    (cmatch, rmatch, phases, fallbacks)``.
+    (cmatch, rmatch, phases, fallbacks, certified)``.
+
+    ``certified`` is a device bool: True iff the final phase's BFS proved no
+    augmenting path remains (the matching is maximum, Berge).  A run cut
+    short by a positive ``cfg.max_phases`` budget returns ``certified=False``
+    — the matching is valid but possibly sub-maximum; with
+    ``cfg.degrade_maximal`` it is additionally made maximal by one greedy
+    augmentation round (single-device path; :class:`~repro.matching.sharded.
+    ShardedMatcher` applies the same round outside the ``shard_map`` region).
 
     Shape-polymorphic: ``nc``/``nr``/``block_edges`` are derived from the
     argument shapes at trace time, so one returned function serves every size
@@ -636,7 +644,21 @@ def make_solver(cfg: MatcherConfig, axis: Optional[str] = None):
 
         carry = (cmatch, rmatch, jnp.bool_(True), jnp.int32(0), jnp.int32(0))
         carry = jax.lax.while_loop(outer_cond, outer_body, carry)
-        cmatch, rmatch, _, phases, fallbacks = carry
-        return cmatch, rmatch, phases, fallbacks
+        cmatch, rmatch, aug, phases, fallbacks = carry
+        # aug is the last BFS verdict: False means the phase found no
+        # augmenting path — Berge certifies the matching maximum.  A
+        # budget-truncated exit leaves aug True: valid but uncertified.
+        certified = ~aug
+        if cfg.degrade_maximal and cfg.max_phases > 0 and axis is None:
+            # Budget exhausted -> the truncated matching may leave free
+            # columns adjacent to free rows.  One speculative greedy round
+            # (the `cheap` warm start's augment-only pass) restores
+            # maximality without another BFS phase.  Local import:
+            # warmstart.py imports solver internals from this module.
+            from .warmstart import cheap_init
+            cmatch, rmatch = jax.lax.cond(
+                certified, lambda cr: cr,
+                lambda cr: cheap_init(ecol, cadj, *cr), (cmatch, rmatch))
+        return cmatch, rmatch, phases, fallbacks, certified
 
     return match_fn

@@ -26,12 +26,18 @@ class MatchState:
     ``cmatch`` (nc+1,) / ``rmatch`` (nr+1,): matched partner or -1; the last
     slot is the kernels' scratch sentinel.  ``phases``/``fallbacks`` count the
     solver's outer iterations (0 for a freshly initialized state).
+    ``certified`` is the solver's Berge certificate: True iff the last BFS
+    phase proved no augmenting path remains, i.e. the matching is maximum —
+    a ``MatcherConfig.max_phases``-truncated solve leaves it False (fresh
+    and warm-started-only states are likewise uncertified).
     """
 
     cmatch: jax.Array
     rmatch: jax.Array
     phases: jax.Array
     fallbacks: jax.Array
+    certified: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.bool_(False))
 
     @classmethod
     def fresh(cls, nc: int, nr: int, batch_shape: Tuple[int, ...] = ()
@@ -42,7 +48,8 @@ class MatchState:
         cm = cm.at[..., nc].set(SENTINEL)
         rm = rm.at[..., nr].set(SENTINEL)
         zero = jnp.zeros(batch_shape, jnp.int32)
-        return cls(cmatch=cm, rmatch=rm, phases=zero, fallbacks=zero)
+        return cls(cmatch=cm, rmatch=rm, phases=zero, fallbacks=zero,
+                   certified=jnp.zeros(batch_shape, bool))
 
     @classmethod
     def from_host(cls, cmatch: np.ndarray, rmatch: np.ndarray) -> "MatchState":
@@ -52,7 +59,8 @@ class MatchState:
         rm = jnp.concatenate([jnp.asarray(rmatch, jnp.int32),
                               jnp.full((1,), SENTINEL)])
         zero = jnp.int32(0)
-        return cls(cmatch=cm, rmatch=rm, phases=zero, fallbacks=zero)
+        return cls(cmatch=cm, rmatch=rm, phases=zero, fallbacks=zero,
+                   certified=jnp.bool_(False))
 
     @property
     def cardinality(self) -> jax.Array:
@@ -74,12 +82,15 @@ class MatchStats:
     cardinality: jax.Array
     phases: jax.Array
     fallbacks: jax.Array
+    certified: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.bool_(False))
     variant: str = dataclasses.field(default="", metadata=dict(static=True))
 
     @classmethod
     def of(cls, state: MatchState, variant: str = "") -> "MatchStats":
         return cls(cardinality=state.cardinality, phases=state.phases,
-                   fallbacks=state.fallbacks, variant=variant)
+                   fallbacks=state.fallbacks, certified=state.certified,
+                   variant=variant)
 
     def as_dict(self) -> dict:
         """Host-side stats dict (the old API's ``stats`` payload)."""
@@ -87,6 +98,8 @@ class MatchStats:
                for k in ("phases", "fallbacks", "cardinality")}
         out = {k: int(v) if v.ndim == 0 else v.astype(int)
                for k, v in out.items()}
+        cert = np.asarray(self.certified)
+        out["certified"] = bool(cert) if cert.ndim == 0 else cert.astype(bool)
         out["variant"] = self.variant
         return out
 

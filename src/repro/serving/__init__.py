@@ -19,16 +19,24 @@ load; ``docs/architecture.md`` ("The serving layer") documents the design.
 """
 from .bucketizer import (Admission, Bucketizer, OversizeGraphError,
                          SizeBucket, ladder)
+from .faults import (CompileFault, FaultInjector, FlushThreadDeath,
+                     InjectedFault, PoisonedGraphFault)
 from .metrics import ServiceMetrics, percentile
 from .scheduler import Flush, MicroBatcher, batch_bucket, batch_ladder
-from .service import (MatchingService, MatchResult, ServiceClosedError)
+from .service import (DeadlineExceededError, FlushThreadDiedError,
+                      MatchingService, MatchResult, QueueFullError,
+                      ServiceClosedError, SheddedError)
 from .warmup import (WarmupGrid, WarmupReport, synthetic_bucket_graph,
                      warm_up)
 
 __all__ = [
     "Admission", "Bucketizer", "OversizeGraphError", "SizeBucket", "ladder",
+    "CompileFault", "FaultInjector", "FlushThreadDeath", "InjectedFault",
+    "PoisonedGraphFault",
     "ServiceMetrics", "percentile",
     "Flush", "MicroBatcher", "batch_bucket", "batch_ladder",
     "MatchingService", "MatchResult", "ServiceClosedError",
+    "DeadlineExceededError", "FlushThreadDiedError", "QueueFullError",
+    "SheddedError",
     "WarmupGrid", "WarmupReport", "synthetic_bucket_graph", "warm_up",
 ]

@@ -21,7 +21,8 @@ from typing import Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.csr import BipartiteCSR
-from repro.matching.device_csr import LANE, DeviceCSR, bucket_nnz
+from repro.matching.device_csr import (LANE, DeviceCSR, GraphValidationError,
+                                       bucket_nnz, validate_structure)
 
 
 class OversizeGraphError(ValueError):
@@ -116,10 +117,17 @@ class Bucketizer:
     (``MatcherConfig(dirop=True)``); the service also requests it per
     admission when the request's config needs it, so this default only
     matters for callers using the bucketizer directly.
+    ``validate`` runs the :func:`repro.matching.validate_structure`
+    invariants on every admission and raises the typed
+    :class:`~repro.matching.GraphValidationError` on malformed input —
+    the first rung of the serving failure ladder
+    (:class:`~repro.serving.service.MatchingService` turns it on by
+    default for the bucketizers it builds itself).
     """
 
     def __init__(self, buckets: Optional[Sequence[SizeBucket]] = None,
-                 oversize: str = "reject", build_csc: bool = False):
+                 oversize: str = "reject", build_csc: bool = False,
+                 validate: bool = False):
         assert oversize in ("reject", "shard"), oversize
         bs = tuple(sorted(buckets if buckets is not None else ladder(),
                           key=lambda b: b.cost))
@@ -127,6 +135,7 @@ class Bucketizer:
         self.buckets = bs
         self.oversize = oversize
         self.build_csc = build_csc
+        self.validate = validate
 
     def bucket_for(self, nc: int, nr: int, nnz: int) -> Optional[SizeBucket]:
         """Smallest (by padded footprint) declared bucket that fits."""
@@ -160,6 +169,17 @@ class Bucketizer:
             raise TypeError(
                 f"admit() takes BipartiteCSR or DeviceCSR, got {type(graph)}"
                 " — build edge lists with Bucketizer.from_edges")
+        if self.validate:
+            # garbage is rejected HERE, before it can reach a kernel where
+            # out-of-range ids would be clamped into silently-wrong
+            # matchings or poison a whole co-batched dispatch
+            if isinstance(graph, BipartiteCSR):
+                problems = validate_structure(graph.cxadj, graph.cadj,
+                                              graph.ecol, nnz, nc, nr)
+                if problems:
+                    raise GraphValidationError(problems)
+            else:
+                graph.validate()
         b = self.bucket_for(nc, nr, nnz)
         if b is None:
             if self.oversize == "reject":

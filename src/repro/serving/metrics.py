@@ -35,6 +35,19 @@ class ServiceMetrics:
         self.failed = 0
         self.rejected = 0           # typed admission rejections
         self.sharded = 0            # oversize requests routed to ShardedMatcher
+        # fault-tolerance lifecycle (see docs/architecture.md, the
+        # degradation ladder): with `pending` these make the flush mix sum
+        # to submissions —
+        #   submitted == completed + failed + cancelled + shed_oldest
+        #                + deadline_misses + pending
+        # (shed_newest requests were refused at submit and are NOT in
+        # `submitted`, mirroring `rejected`)
+        self.cancelled = 0          # futures cancelled before their flush
+        self.shed_newest = 0        # submits refused by backpressure
+        self.shed_oldest = 0        # queued requests evicted for new ones
+        self.deadline_misses = 0    # expired before dispatch, shed at flush
+        self.quarantined = 0        # poisoned requests isolated by bisection
+        self.restarts = 0           # flush-thread supervisor restarts
         # dispatch accounting (one device dispatch per flush)
         self.dispatches = 0
         self.flushes = {"full": 0, "deadline": 0, "drain": 0}
@@ -86,6 +99,29 @@ class ServiceMetrics:
         with self._lock:
             self.failed += n
 
+    def record_cancelled(self, n: int = 1) -> None:
+        with self._lock:
+            self.cancelled += n
+
+    def record_shed(self, policy: str, n: int = 1) -> None:
+        with self._lock:
+            if policy == "reject-newest":
+                self.shed_newest += n
+            else:
+                self.shed_oldest += n
+
+    def record_deadline_miss(self, n: int = 1) -> None:
+        with self._lock:
+            self.deadline_misses += n
+
+    def record_quarantined(self, n: int = 1) -> None:
+        with self._lock:
+            self.quarantined += n
+
+    def record_restart(self) -> None:
+        with self._lock:
+            self.restarts += 1
+
     # -- reading --------------------------------------------------------------
     @property
     def occupancy(self) -> float:
@@ -109,6 +145,12 @@ class ServiceMetrics:
                 "failed": self.failed,
                 "rejected": self.rejected,
                 "sharded": self.sharded,
+                "cancelled": self.cancelled,
+                "shed_newest": self.shed_newest,
+                "shed_oldest": self.shed_oldest,
+                "deadline_misses": self.deadline_misses,
+                "quarantined": self.quarantined,
+                "restarts": self.restarts,
                 "dispatches": self.dispatches,
                 "flushes_full": self.flushes.get("full", 0),
                 "flushes_deadline": self.flushes.get("deadline", 0),

@@ -136,6 +136,31 @@ class MicroBatcher:
               for q in self._queues.values() if q]
         return min(ts) if ts else None
 
+    def evict_oldest(self) -> Optional[Queued]:
+        """Pop the single oldest queued request across every key.
+
+        The service's ``reject-oldest`` shed policy: when the bounded
+        admission queue is full, the request that has waited longest — and
+        is therefore the most likely to miss its deadline anyway — makes
+        room for the incoming one.  Returns ``None`` when nothing is queued.
+        """
+        best_key, best = None, None
+        for k, q in self._queues.items():
+            if q and (best is None or q[0].enqueued_at < best.enqueued_at):
+                best_key, best = k, q[0]
+        if best is None:
+            return None
+        q = self._queues[best_key]
+        q.pop(0)
+        if not q:
+            del self._queues[best_key]
+        return best
+
+    def oldest_enqueued_at(self) -> Optional[float]:
+        """Enqueue time of the request :meth:`evict_oldest` would pop."""
+        ts = [q[0].enqueued_at for q in self._queues.values() if q]
+        return min(ts) if ts else None
+
     def drain(self) -> List[Flush]:
         """Flush every non-empty queue immediately (graceful drain)."""
         return [f for k in list(self._queues)
